@@ -1,0 +1,69 @@
+"""Kernel-layer microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (they are
+TPU kernels); the meaningful CPU numbers are the XLA-compiled reference
+paths, reported alongside interpret-mode verification deltas.  On TPU the
+same ops.py entry points dispatch to the Mosaic kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.moments import BetaParams, exponent_grid
+from repro.kernels import ref
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    kf, kt = jax.random.split(key)
+
+    # posterior grid: production telemetry scale (N=16k obs, G=512)
+    n, g = 16384, 512
+    f = jax.random.uniform(kf, (n,), minval=0.05, maxval=0.95)
+    t = f**0.9 * 25.0 + f**0.7 * 2.0 * jax.random.normal(kt, (n,))
+    grid = exponent_grid(g)
+    prior = BetaParams(jnp.float32(2.0), jnp.float32(2.0))
+
+    fn = jax.jit(
+        lambda tt, ff: ref.posterior_grid_ref(
+            grid, tt, ff, jnp.float32(25.0), jnp.float32(0.25),
+            jnp.float32(0.7), prior.a, prior.b, None, mode="alpha",
+        )
+    )
+    us = time_fn(fn, t, f)
+    gflops = 2 * g * n * 4 / (us * 1e-6) / 1e9  # ~4 transcendental-ish ops/cell
+    emit(f"posterior_grid_ref_g{g}_n{n}", us, f"~{gflops:.1f} GOp/s xla-cpu")
+
+    from repro.kernels.posterior_grid import posterior_grid_pallas
+
+    out_i = posterior_grid_pallas(
+        grid, t, f, jnp.ones_like(t), 25.0, 0.25, 0.7, 2.0, 2.0,
+        mode="alpha", interpret=True,
+    )
+    want = fn(t, f)
+    emit(
+        "posterior_grid_pallas_verify", 0.0,
+        f"interpret-mode max_rel_err={float(jnp.max(jnp.abs(out_i - want)) / (1 + jnp.max(jnp.abs(want)))):.2e}",
+    )
+
+    # decode attention: 32k cache, GQA 32q/4kv heads
+    b, h, kvh, d, s = 4, 32, 4, 128, 32768
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, d), jnp.bfloat16)
+    kc = jax.random.normal(kk, (b, s, kvh, d), jnp.bfloat16)
+    vc = jax.random.normal(kv, (b, s, kvh, d), jnp.bfloat16)
+    length = jnp.full((b,), s, jnp.int32)
+    fn2 = jax.jit(lambda qq, kk_, vv: ref.decode_attention_ref(qq, kk_, vv, length))
+    us2 = time_fn(fn2, q, kc, vc, iters=5)
+    bytes_moved = 2 * b * s * kvh * d * 2
+    emit(
+        f"decode_attention_ref_b{b}_s{s}", us2,
+        f"cache={bytes_moved/2**20:.0f}MiB eff_bw={bytes_moved/(us2*1e-6)/2**30:.1f}GiB/s xla-cpu",
+    )
+
+
+if __name__ == "__main__":
+    main()

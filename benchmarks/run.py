@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure + system benches.
+
+Emits ``name,us_per_call,derived`` CSV rows.  ``python -m benchmarks.run``.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    bench_frontier,
+    bench_gibbs_convergence,
+    bench_kernels,
+    bench_partitioner,
+    bench_posterior_approx,
+    bench_train_step,
+)
+
+ALL = [
+    ("fig1_2_frontier", bench_frontier.main),
+    ("fig3_4_posterior_approx", bench_posterior_approx.main),
+    ("fig5_gibbs_convergence", bench_gibbs_convergence.main),
+    ("partitioner_vs_naive", bench_partitioner.main),
+    ("kernels", bench_kernels.main),
+    ("train_step", bench_train_step.main),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in ALL:
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name},FAILED,{type(e).__name__}: {e}")
+    if failed:
+        sys.exit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

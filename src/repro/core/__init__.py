@@ -1,0 +1,77 @@
+"""The paper's contribution: Bayesian estimation of processing-unit models and
+frontier-optimal workflow partitioning (Chua & Huberman 2015)."""
+from .distributions import (
+    beta_logpdf,
+    gamma_logpdf,
+    normal_cdf,
+    normal_logpdf,
+    sample_beta,
+    sample_gamma,
+    sample_normal,
+)
+from .frontier import (
+    UnitParams,
+    completion_cdf,
+    mean_var_completion,
+    optimal_two_way_fraction,
+    pareto_mask,
+    sweep_two_way,
+)
+from .gibbs import GibbsState, fit, fit_fleet, gibbs_batch, init_state
+from .moments import (
+    BetaParams,
+    exponent_grid,
+    fit_beta_method_of_moments,
+    log_posterior_alpha_ref,
+    log_posterior_beta_ref,
+    moments_from_log_density,
+    update_alpha_beta_params,
+)
+from .partitioner import (
+    HeterogeneityAwarePartitioner,
+    WorkerTelemetry,
+    optimize_fractions,
+    quantize_fractions,
+)
+from .posterior import (
+    NormalGammaParams,
+    log_likelihood,
+    posterior_predictive_logpdf,
+    update_normal_gamma,
+)
+
+__all__ = [
+    "BetaParams",
+    "GibbsState",
+    "HeterogeneityAwarePartitioner",
+    "NormalGammaParams",
+    "UnitParams",
+    "WorkerTelemetry",
+    "beta_logpdf",
+    "completion_cdf",
+    "exponent_grid",
+    "fit",
+    "fit_beta_method_of_moments",
+    "fit_fleet",
+    "gamma_logpdf",
+    "gibbs_batch",
+    "init_state",
+    "log_likelihood",
+    "log_posterior_alpha_ref",
+    "log_posterior_beta_ref",
+    "mean_var_completion",
+    "moments_from_log_density",
+    "normal_cdf",
+    "normal_logpdf",
+    "optimal_two_way_fraction",
+    "optimize_fractions",
+    "pareto_mask",
+    "posterior_predictive_logpdf",
+    "quantize_fractions",
+    "sample_beta",
+    "sample_gamma",
+    "sample_normal",
+    "sweep_two_way",
+    "update_alpha_beta_params",
+    "update_normal_gamma",
+]

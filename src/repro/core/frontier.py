@@ -1,0 +1,145 @@
+"""Completion-time statistics of a partitioned workflow and the QoS frontier.
+
+Implements Section 1 of the paper, generalized from 2 units to K units:
+
+  P(t <= eps | f, Theta) = prod_k P(t_k <= eps | f_k, Theta_k)
+  E(t)   = int_0^inf [1 - P(t <= eps)] d eps
+  Var(t) = 2 int_0^inf eps [1 - P(t <= eps)] d eps - E(t)^2
+
+with per-unit times t_k ~ N(f_k^alpha_k mu_k, (f_k^beta_k sigma_k)^2).
+The (mu(f), sigma^2(f)) locus over the fraction simplex is parabola-like; its
+Pareto-minimal subset is the efficient frontier used to pick the operating
+point for a QoS target.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .distributions import normal_cdf
+
+Array = jax.Array
+
+DEFAULT_QUAD_POINTS = 1024
+
+
+class UnitParams(NamedTuple):
+    """Per-unit completion-time model parameters; leaves have shape (K,)."""
+
+    mu: Array
+    sigma: Array
+    alpha: Array
+    beta: Array
+
+    @staticmethod
+    def of(mu, sigma, alpha=None, beta=None) -> "UnitParams":
+        mu = jnp.asarray(mu, jnp.float32)
+        sigma = jnp.asarray(sigma, jnp.float32)
+        one = jnp.ones_like(mu)
+        return UnitParams(
+            mu,
+            sigma,
+            one if alpha is None else jnp.asarray(alpha, jnp.float32),
+            one if beta is None else jnp.asarray(beta, jnp.float32),
+        )
+
+
+def component_mean_std(fracs: Array, params: UnitParams) -> Tuple[Array, Array]:
+    """Per-unit mean f^alpha mu and std f^beta sigma for fractions (..., K)."""
+    f = jnp.maximum(fracs, 1e-9)
+    mean = f**params.alpha * params.mu
+    std = f**params.beta * params.sigma
+    return mean, jnp.maximum(std, 1e-9)
+
+
+def completion_cdf(eps: Array, fracs: Array, params: UnitParams) -> Array:
+    """P(t <= eps | f, Theta): product of per-unit Normal CDFs.
+
+    eps: (..., Q); fracs: (K,).  Returns (..., Q).
+    """
+    mean, std = component_mean_std(fracs, params)  # (K,)
+    cdfs = normal_cdf(eps[..., None], mean, std)  # (..., Q, K)
+    return jnp.prod(cdfs, axis=-1)
+
+
+def mean_var_completion(
+    fracs: Array,
+    params: UnitParams,
+    num_points: int = DEFAULT_QUAD_POINTS,
+) -> Tuple[Array, Array]:
+    """E(t) and Var(t) of the max-completion time by trapezoid quadrature.
+
+    Integrates the survival function on [0, max_k(mean_k + 8 std_k)] — the
+    integrand is exponentially small beyond.  Differentiable in ``fracs`` so
+    the partitioner can use gradients.
+    """
+    mean, std = component_mean_std(fracs, params)
+    upper = jnp.max(mean + 8.0 * std)
+    upper = jnp.maximum(upper, 1e-6)
+    eps = jnp.linspace(0.0, 1.0, num_points, dtype=fracs.dtype) * upper
+    surv = 1.0 - completion_cdf(eps, fracs, params)  # (Q,)
+    e_t = jnp.trapezoid(surv, eps)
+    e_t2 = 2.0 * jnp.trapezoid(eps * surv, eps)
+    var = jnp.maximum(e_t2 - e_t * e_t, 0.0)
+    return e_t, var
+
+
+def sweep_two_way(
+    params: UnitParams,
+    num_f: int = 201,
+    num_points: int = DEFAULT_QUAD_POINTS,
+) -> Tuple[Array, Array, Array]:
+    """The paper's Fig 1/2 curves: (f_grid, mu(f), sigma^2(f)) for K=2."""
+    f_grid = jnp.linspace(1e-3, 1.0 - 1e-3, num_f, dtype=jnp.float32)
+
+    def one(f):
+        fracs = jnp.stack([f, 1.0 - f])
+        return mean_var_completion(fracs, params, num_points)
+
+    mu_f, var_f = jax.vmap(one)(f_grid)
+    return f_grid, mu_f, var_f
+
+
+def pareto_mask(mu_f: Array, var_f: Array) -> Array:
+    """Efficient frontier: points not dominated in (mu, var) (both minimized)."""
+    dominated = jnp.any(
+        (mu_f[None, :] <= mu_f[:, None])
+        & (var_f[None, :] <= var_f[:, None])
+        & ((mu_f[None, :] < mu_f[:, None]) | (var_f[None, :] < var_f[:, None])),
+        axis=1,
+    )
+    return ~dominated
+
+
+@functools.partial(jax.jit, static_argnames=("num_f", "num_points", "objective"))
+def optimal_two_way_fraction(
+    params: UnitParams,
+    *,
+    num_f: int = 201,
+    num_points: int = DEFAULT_QUAD_POINTS,
+    objective: str = "mean",
+    risk_aversion: float = 0.0,
+    var_budget: float = jnp.inf,
+) -> Tuple[Array, Array, Array]:
+    """Pick f on the frontier.
+
+    objective:
+      "mean"        — min mu(f)                       (fastest expected)
+      "mean_var"    — min mu(f) + risk_aversion * sigma^2(f)
+      "constrained" — min mu(f) subject to sigma^2(f) <= var_budget
+    Returns (f*, mu(f*), sigma^2(f*)).
+    """
+    f_grid, mu_f, var_f = sweep_two_way(params, num_f, num_points)
+    if objective == "mean":
+        score = mu_f
+    elif objective == "mean_var":
+        score = mu_f + risk_aversion * var_f
+    elif objective == "constrained":
+        score = jnp.where(var_f <= var_budget, mu_f, jnp.inf)
+    else:
+        raise ValueError(f"unknown objective {objective!r}")
+    idx = jnp.argmin(score)
+    return f_grid[idx], mu_f[idx], var_f[idx]

@@ -1,0 +1,153 @@
+"""Grid-based posteriors for the scaling exponents alpha, beta — Eqs 10-18.
+
+The posteriors of alpha (Eq 10) and beta (Eq 11) are non-conjugate.  Following
+the paper we (i) evaluate the unnormalized log-posterior on a grid over (0, 1),
+(ii) compute E and Var by numerical integration (Eqs 16-18), and (iii) fit a
+Beta distribution by the method of moments (Eqs 12-15).
+
+``log_posterior_alpha_ref`` / ``log_posterior_beta_ref`` are the pure-jnp
+oracles; ``repro.kernels.posterior_grid`` provides the Pallas TPU kernel for
+the same computation (the O(G*N) hot loop).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .distributions import EPS, normalize_log_density, trapezoid_weights
+
+Array = jax.Array
+
+DEFAULT_GRID_SIZE = 512
+GRID_LO = 1e-4
+GRID_HI = 1.0 - 1e-4
+
+
+class BetaParams(NamedTuple):
+    """Beta prior/posterior hyperparameters for one exponent."""
+
+    a: Array  # theta (for alpha) / delta (for beta)
+    b: Array  # phi   (for alpha) / eta   (for beta)
+
+    @staticmethod
+    def default() -> "BetaParams":
+        # Weakly informative, mildly favouring the interior of (0, 1).
+        return BetaParams(jnp.asarray(2.0, jnp.float32), jnp.asarray(2.0, jnp.float32))
+
+
+def exponent_grid(size: int = DEFAULT_GRID_SIZE) -> Array:
+    return jnp.linspace(GRID_LO, GRID_HI, size, dtype=jnp.float32)
+
+
+def log_posterior_alpha_ref(
+    grid: Array,
+    t: Array,
+    f: Array,
+    mu: Array,
+    lam: Array,
+    beta: Array,
+    prior: BetaParams,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Unnormalized log p(alpha | T, F, mu, lambda, beta) on ``grid`` (Eq 10).
+
+    Shapes: grid (G,), t/f (N,) -> (G,).  Leading batch axes are handled by the
+    callers via vmap.
+    """
+    f = jnp.maximum(f, 1e-6)
+    logf = jnp.log(f)  # (N,)
+    # mean[g, n] = f_n^{alpha_g} * mu
+    mean = jnp.exp(grid[:, None] * logf[None, :]) * mu
+    z = (t[None, :] - mean) * jnp.exp(-beta * logf)[None, :]
+    sq = z * z
+    if mask is not None:
+        sq = sq * mask.astype(sq.dtype)[None, :]
+    quad = -0.5 * lam * jnp.sum(sq, axis=-1)
+    g = jnp.clip(grid, EPS, 1.0 - EPS)
+    return quad + (prior.a - 1.0) * jnp.log(g) + (prior.b - 1.0) * jnp.log1p(-g)
+
+
+def log_posterior_beta_ref(
+    grid: Array,
+    t: Array,
+    f: Array,
+    mu: Array,
+    lam: Array,
+    alpha: Array,
+    prior: BetaParams,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Unnormalized log p(beta | T, F, mu, lambda, alpha) on ``grid`` (Eq 11).
+
+    Includes the -beta * sum(log f) Jacobian term from Eq 4.
+    """
+    f = jnp.maximum(f, 1e-6)
+    logf = jnp.log(f)  # (N,)
+    resid = t - jnp.exp(alpha * logf) * mu  # (N,)
+    # z[g, n] = resid_n * f_n^{-beta_g}
+    z = resid[None, :] * jnp.exp(-grid[:, None] * logf[None, :])
+    sq = z * z
+    if mask is not None:
+        m = mask.astype(sq.dtype)
+        sq = sq * m[None, :]
+        sum_logf = jnp.sum(logf * m)
+    else:
+        sum_logf = jnp.sum(logf)
+    quad = -0.5 * lam * jnp.sum(sq, axis=-1) - grid * sum_logf
+    g = jnp.clip(grid, EPS, 1.0 - EPS)
+    return quad + (prior.a - 1.0) * jnp.log(g) + (prior.b - 1.0) * jnp.log1p(-g)
+
+
+def moments_from_log_density(grid: Array, logp: Array) -> Tuple[Array, Array]:
+    """E and Var by numerical integration of a grid log-density (Eqs 16-18)."""
+    pdf = normalize_log_density(logp, grid)
+    w = trapezoid_weights(grid)
+    e1 = jnp.sum(pdf * w * grid, axis=-1)
+    e2 = jnp.sum(pdf * w * grid * grid, axis=-1)
+    var = jnp.maximum(e2 - e1 * e1, 1e-12)
+    return e1, var
+
+
+def fit_beta_method_of_moments(mean: Array, var: Array) -> BetaParams:
+    """Beta(a, b) from (E, Var) — Eqs 12-15.
+
+    Validity requires Var < E(1-E); we clamp into that region (the grid
+    integration can land outside it only through numerical error).
+    """
+    mean = jnp.clip(mean, 1e-4, 1.0 - 1e-4)
+    cap = mean * (1.0 - mean)
+    var = jnp.clip(var, 1e-10, 0.999 * cap)
+    common = cap / var - 1.0
+    a = mean * common
+    b = (1.0 - mean) * common
+    return BetaParams(jnp.maximum(a, 1e-3), jnp.maximum(b, 1e-3))
+
+
+def update_alpha_beta_params(
+    grid: Array,
+    t: Array,
+    f: Array,
+    mu: Array,
+    lam: Array,
+    alpha: Array,
+    beta: Array,
+    alpha_prior: BetaParams,
+    beta_prior: BetaParams,
+    mask: Optional[Array] = None,
+    *,
+    use_pallas: bool = False,
+) -> Tuple[BetaParams, BetaParams]:
+    """Posterior Beta approximations for alpha and beta (one Gibbs sub-step)."""
+    if use_pallas:
+        from repro.kernels import ops as _kops
+
+        logp_a = _kops.posterior_grid_alpha(grid, t, f, mu, lam, beta, alpha_prior, mask)
+        logp_b = _kops.posterior_grid_beta(grid, t, f, mu, lam, alpha, beta_prior, mask)
+    else:
+        logp_a = log_posterior_alpha_ref(grid, t, f, mu, lam, beta, alpha_prior, mask)
+        logp_b = log_posterior_beta_ref(grid, t, f, mu, lam, alpha, beta_prior, mask)
+    ea, va = moments_from_log_density(grid, logp_a)
+    eb, vb = moments_from_log_density(grid, logp_b)
+    return fit_beta_method_of_moments(ea, va), fit_beta_method_of_moments(eb, vb)

@@ -1,0 +1,169 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Every parameter/cache tensor carries logical axis names (see
+``repro.models.params``).  ``spec_for`` maps them to mesh axes greedily:
+each logical axis tries its candidate mesh axes in order; a candidate is
+taken only if (a) it is not already used by another dim of the same tensor
+and (b) the dim size is divisible by the mesh-axis size.  Anything that
+fails degrades to replication — this is what lets e.g. smollm's 9 heads or
+granite's 40 experts compile cleanly on a 16-way model axis.
+
+Default ruleset (TP on 'model', FSDP/ZeRO on 'data'(+'pod')):
+  vocab/mlp/heads/kv_heads/experts/rnn/cell -> model   (tensor/expert parallel)
+  embed  -> fsdp axes  (ZeRO-3: params+optimizer sharded over data parallels)
+  head_dim -> model    (fallback TP when the head axes were indivisible)
+  batch  -> (pod, data)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+AxisCandidates = Tuple[str, ...]
+Rules = Dict[str, Tuple[AxisCandidates, ...]]
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = True) -> Rules:
+    fsdp_axes: Tuple[AxisCandidates, ...] = ()
+    if fsdp:
+        if "pod" in mesh.axis_names:
+            fsdp_axes = (("pod", "data"), ("data",))
+        else:
+            fsdp_axes = (("data",),)
+    batch: Tuple[AxisCandidates, ...] = (
+        (("pod", "data"), ("data",))
+        if "pod" in mesh.axis_names
+        else (("data",),)
+    )
+    return {
+        "vocab": (("model",),),
+        "mlp": (("model",),),
+        "heads": (("model",),),
+        "kv_heads": (("model",),),
+        # experts shard over the DATA axes (EP): the model axis is reserved
+        # for the per-expert d_ff TP split (see repro.models.moe) — the only
+        # layout that fits 480B-class MoE weights in per-chip HBM.
+        "experts": (
+            (("pod", "data"), ("data",))
+            if "pod" in mesh.axis_names
+            else (("data",),)
+        ),
+        "rnn": (("model",),),
+        "cell": (("model",),),
+        # NOTE: head_dim deliberately NOT sharded for parameters — contracting
+        # a sharded head_dim turns attention logits into partial sums and
+        # all-reduces (B,H,T,S)-sized tensors.  It remains a fallback for
+        # decode-cache *storage* (see cache_rules), where it shards the big
+        # KV buffers and only small per-step logits need reducing.
+        "embed": fsdp_axes,
+        "batch": batch,
+        "seq": (),
+        "layers": (),
+    }
+
+
+def cache_rules(mesh: Mesh) -> Rules:
+    """Decode-cache rules: prefer kv_heads -> model; else shard the cache's
+    seq dim over model (flash-decode: per-shard partial softmax + tiny
+    combines); recurrent-state feature dims (head_dim/rnn) as last resort."""
+    r = dict(default_rules(mesh))
+    r["seq"] = (("model",),)
+    r["head_dim"] = (("model",),)
+    return r
+
+
+# Lower number = assigned first (per-tensor greedy order).
+_PRIORITY = {
+    "vocab": 0, "mlp": 0, "heads": 0, "kv_heads": 0, "experts": 0,
+    "rnn": 0, "cell": 0, "batch": 0,
+    "embed": 1,
+    "seq": 2,
+    "head_dim": 3,
+}
+
+
+def _axis_size(mesh: Mesh, axes: AxisCandidates) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Rules,
+) -> PS:
+    """Greedy logical->mesh assignment with divisibility fallback.
+
+    Dims are visited in _PRIORITY order (not positional order) so that e.g. a
+    divisible kv_heads dim claims the model axis before the seq fallback.
+    """
+    used: set = set()
+    out: list = [None] * len(tuple(shape))
+    order = sorted(
+        range(len(out)), key=lambda i: _PRIORITY.get(logical[i] or "", 1)
+    )
+    for i in order:
+        dim, name = shape[i], logical[i]
+        for cand in rules.get(name or "", ()):
+            cand_t = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(a in used for a in cand_t):
+                continue
+            if any(a not in mesh.axis_names for a in cand_t):
+                continue
+            if dim % _axis_size(mesh, cand_t) != 0:
+                continue
+            out[i] = cand_t if len(cand_t) > 1 else cand_t[0]
+            used.update(cand_t)
+            break
+    return PS(*out)
+
+
+def tree_shardings(
+    abstract_tree: Any,
+    axes_tree_: Any,
+    mesh: Mesh,
+    rules: Optional[Rules] = None,
+):
+    """NamedShardings for a parallel (abstract-values, logical-axes) tree."""
+    rules = rules or default_rules(mesh)
+
+    def one(aval, axes):
+        return NamedSharding(mesh, spec_for(aval.shape, axes, mesh, rules))
+
+    return jax.tree_util.tree_map(one, abstract_tree, axes_tree_)
+
+
+# ---------------------------------------------------------------------------
+# activation / batch specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh) -> PS:
+    return PS(tuple(a for a in ("pod", "data") if a in mesh.axis_names))
+
+
+def data_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """Shard dim0 (batch) over the data axes, replicate the rest."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return NamedSharding(mesh, PS(axes, *([None] * (ndim - 1))))
+
+
+def cache_shardings(
+    cache_abstract: Any, cache_axes: Any, mesh: Mesh, rules: Optional[Rules] = None
+):
+    """Shardings for a decode cache from its exact logical-axes tree
+    (``repro.models.transformer.cache_axes_tree``): batch over the data axes,
+    kv-heads/feature dims over model with divisibility fallback."""
+    rules = rules or cache_rules(mesh)
+    is_axes = lambda x: isinstance(x, tuple)
+
+    def one(aval, axes):
+        return NamedSharding(mesh, spec_for(aval.shape, axes, mesh, rules))
+
+    return jax.tree_util.tree_map(one, cache_abstract, cache_axes, is_leaf=None)

@@ -1,0 +1,129 @@
+"""Pallas TPU flash-decode kernel: single-token GQA attention over a KV cache.
+
+The serving hot spot for the ``decode_32k`` cells: one new query token per
+sequence attends to a seq_len-deep KV cache.  Arithmetic intensity is ~O(1)
+FLOP/byte (every cache byte is read once per step), so the kernel's job is to
+stream the cache through VMEM at full HBM bandwidth with an online softmax —
+no (B, H, S) logits ever materialize in HBM.
+
+TPU mapping:
+  * pallas grid = (B, KVH, S/BS); the S axis is innermost so the output block
+    and the (m, l, acc) running statistics stay VMEM-resident per (b, kv-head).
+  * GQA: the H = KVH * G query heads are reshaped to (KVH, G) and the G group
+    dim rides the sublane axis, giving (G, D) x (D, BS) MXU matmuls — the TPU
+    analogue of the GPU broadcast-q-across-warps trick.
+  * online softmax in f32 scratch (m, l running max/denominator), cache
+    blocks may be bf16.
+  * variable cache fill handled by a per-sequence ``length`` scalar; blocks
+    fully beyond length are skipped via @pl.when (no HBM traffic for the
+    unfilled tail).
+
+Oracle: ``repro.kernels.ref.decode_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, block_s, scale):
+    si = pl.program_id(2)
+    n_s = pl.num_programs(2)
+    length = len_ref[0, 0]
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Skip blocks entirely beyond the valid cache fill.
+    @pl.when(si * block_s < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (BS, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (BS, D)
+
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, BS)
+
+        pos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(pos < length, logits, NEG_INF)
+
+        m_prev = m_ref[...]  # (G, 1)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)  # (G, BS)
+        corr = jnp.exp(m_prev - m_new)  # (G, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_pallas(
+    q: Array,  # (B, H, D)
+    k: Array,  # (B, S, KVH, D)
+    v: Array,  # (B, S, KVH, D)
+    length: Array,  # (B,) int32 valid cache lengths
+    *,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = False,
+) -> Array:
+    """Flash-decode GQA attention.  Returns (B, H, D) in q.dtype."""
+    b, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    if h % kvh != 0:
+        raise ValueError(f"H={h} not divisible by KVH={kvh}")
+    g = h // kvh
+    scale = d**-0.5
+
+    bs = min(block_s, s)
+    s_pad = (-s) % bs
+    if s_pad:
+        k = jnp.pad(k, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    s_p = s + s_pad
+    n_sb = s_p // bs
+
+    qg = q.reshape(b, kvh, g, d)
+    kt = k.transpose(0, 2, 1, 3)  # (B, KVH, S, D)
+    vt = v.transpose(0, 2, 1, 3)
+    len2 = length.astype(jnp.int32).reshape(b, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=bs, scale=scale),
+        grid=(b, kvh, n_sb),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, ki, si: (bi, 0)),  # length
+            pl.BlockSpec((1, 1, g, d), lambda bi, ki, si: (bi, ki, 0, 0)),  # q
+            pl.BlockSpec((1, 1, bs, d), lambda bi, ki, si: (bi, ki, si, 0)),  # k
+            pl.BlockSpec((1, 1, bs, d), lambda bi, ki, si: (bi, ki, si, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, ki, si: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),  # running max m
+            pltpu.VMEM((g, 1), jnp.float32),  # running denom l
+            pltpu.VMEM((g, d), jnp.float32),  # weighted-value accumulator
+        ],
+        interpret=interpret,
+    )(len2, qg, kt, vt)
+    return out.reshape(b, h, d)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: blocked linear-recurrence scan (RG-LRU / SSM core).
+
+Computes h_t = a_t * h_{t-1} + b_t along time for (B, T, R) gate/input
+streams — the sequential core of RecurrentGemma's RG-LRU and the state
+update of linear-attention SSMs.  This is the op that makes the long_500k
+cells O(T) instead of O(T^2).
+
+TPU mapping:
+  * R (channel) axis -> lanes (128-aligned blocks), B -> sublane-tiled rows;
+  * time is blocked: pallas grid = (B_blocks, R_blocks, T/BT) with the
+    running state h carried in a VMEM scratch across sequential T steps —
+    HBM traffic is exactly one read of (a, b) and one write of h (the
+    associative-scan alternative does log T passes over HBM);
+  * within a block the recurrence unrolls BT elementwise FMAs on the VPU.
+
+Oracle: ``repro.kernels.ref.lru_scan_ref`` (associative-scan based).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BLOCK_T = 128
+DEFAULT_BLOCK_R = 256
+
+
+def _kernel(a_ref, b_ref, h0_ref, out_ref, h_ref, *, block_t):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = h0_ref[:, 0, :].astype(jnp.float32)
+
+    h = h_ref[...]  # (BB, BR) f32 running state
+    for t in range(block_t):
+        a_t = a_ref[:, t, :].astype(jnp.float32)
+        b_t = b_ref[:, t, :].astype(jnp.float32)
+        h = a_t * h + b_t
+        out_ref[:, t, :] = h.astype(out_ref.dtype)
+    h_ref[...] = h
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_r", "interpret")
+)
+def lru_scan_pallas(
+    a: Array,  # (B, T, R) decay gates in (0, 1]
+    b: Array,  # (B, T, R) inputs
+    h0: Array,  # (B, R) initial state
+    *,
+    block_t: int = DEFAULT_BLOCK_T,
+    block_r: int = DEFAULT_BLOCK_R,
+    interpret: bool = False,
+) -> Array:
+    """Returns h (B, T, R) with h_t = a_t * h_{t-1} + b_t, h_0 folded in."""
+    bsz, t, r = a.shape
+    bt = min(block_t, t)
+    br = min(block_r, r)
+    t_pad = (-t) % bt
+    r_pad = (-r) % br
+    if t_pad or r_pad:
+        pad3 = ((0, 0), (0, t_pad), (0, r_pad))
+        a = jnp.pad(a, pad3)  # a=0 in padding keeps h finite
+        b = jnp.pad(b, pad3)
+        h0 = jnp.pad(h0, ((0, 0), (0, r_pad)))
+    t_p, r_p = t + t_pad, r + r_pad
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_t=bt),
+        grid=(bsz, r_p // br, t_p // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, br), lambda bi, ri, ti: (bi, ti, ri)),  # a
+            pl.BlockSpec((1, bt, br), lambda bi, ri, ti: (bi, ti, ri)),  # b
+            pl.BlockSpec((1, 1, br), lambda bi, ri, ti: (bi, 0, ri)),  # h0
+        ],
+        out_specs=pl.BlockSpec((1, bt, br), lambda bi, ri, ti: (bi, ti, ri)),
+        out_shape=jax.ShapeDtypeStruct((bsz, t_p, r_p), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, br), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0[:, None, :])
+    return out[:, :t, :r]

@@ -1,0 +1,84 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode — the
+kernel body executes eagerly against the oracle semantics; on TPU they lower
+to real Mosaic kernels.  The switch is automatic via ``jax.default_backend``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_pallas
+from .lru_scan import lru_scan_pallas
+from .posterior_grid import posterior_grid_pallas
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def posterior_grid_alpha(
+    grid: Array,
+    t: Array,
+    f: Array,
+    mu: Array,
+    lam: Array,
+    beta: Array,
+    prior,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Eq 10 on a grid via the Pallas kernel.  Signature mirrors
+    ``repro.core.moments.log_posterior_alpha_ref``."""
+    if mask is None:
+        mask = jnp.ones_like(t)
+    return posterior_grid_pallas(
+        grid, t, f, mask, mu, lam, beta, prior.a, prior.b,
+        mode="alpha", interpret=_interpret(),
+    )
+
+
+def posterior_grid_beta(
+    grid: Array,
+    t: Array,
+    f: Array,
+    mu: Array,
+    lam: Array,
+    alpha: Array,
+    prior,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Eq 11 on a grid via the Pallas kernel."""
+    if mask is None:
+        mask = jnp.ones_like(t)
+    return posterior_grid_pallas(
+        grid, t, f, mask, mu, lam, alpha, prior.a, prior.b,
+        mode="beta", interpret=_interpret(),
+    )
+
+
+def decode_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    length: Optional[Array] = None,
+    *,
+    block_s: int = 512,
+) -> Array:
+    """Flash-decode GQA attention (B,H,D) x (B,S,KVH,D) -> (B,H,D)."""
+    if length is None:
+        length = jnp.full((q.shape[0],), k.shape[1], jnp.int32)
+    return decode_attention_pallas(
+        q, k, v, length, block_s=block_s, interpret=_interpret()
+    )
+
+
+def lru_scan(a: Array, b: Array, h0: Optional[Array] = None, *, block_t: int = 128) -> Array:
+    """Linear-recurrence scan h_t = a_t h_{t-1} + b_t (RG-LRU / SSM core)."""
+    if h0 is None:
+        h0 = jnp.zeros((a.shape[0], a.shape[2]), a.dtype)
+    return lru_scan_pallas(a, b, h0, block_t=block_t, interpret=_interpret())

@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret=True
+on CPU, real lowering on TPU).  They are deliberately straightforward.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def posterior_grid_ref(
+    grid: Array,
+    t: Array,
+    f: Array,
+    mu: Array,
+    lam: Array,
+    other_exp: Array,
+    prior_a: Array,
+    prior_b: Array,
+    mask: Optional[Array] = None,
+    *,
+    mode: str = "alpha",
+) -> Array:
+    """Unnormalized log-posterior of a scaling exponent on a grid.
+
+    mode="alpha": Eq 10 — grid is alpha, other_exp is the current beta.
+    mode="beta" : Eq 11 — grid is beta,  other_exp is the current alpha,
+                  including the -beta * sum(log f) Jacobian term.
+
+    Shapes: grid (G,), t/f/mask (N,) -> (G,).
+    """
+    f = jnp.maximum(f, 1e-6)
+    logf = jnp.log(f)
+    m = None if mask is None else mask.astype(t.dtype)
+
+    if mode == "alpha":
+        mean = jnp.exp(grid[:, None] * logf[None, :]) * mu  # (G, N)
+        z = (t[None, :] - mean) * jnp.exp(-other_exp * logf)[None, :]
+        sq = z * z
+        if m is not None:
+            sq = sq * m[None, :]
+        quad = -0.5 * lam * jnp.sum(sq, axis=-1)
+        extra = jnp.zeros_like(quad)
+    elif mode == "beta":
+        resid = t - jnp.exp(other_exp * logf) * mu  # (N,)
+        z = resid[None, :] * jnp.exp(-grid[:, None] * logf[None, :])
+        sq = z * z
+        if m is not None:
+            sq = sq * m[None, :]
+            sum_logf = jnp.sum(logf * m)
+        else:
+            sum_logf = jnp.sum(logf)
+        quad = -0.5 * lam * jnp.sum(sq, axis=-1)
+        extra = -grid * sum_logf
+    else:
+        raise ValueError(mode)
+
+    g = jnp.clip(grid, 1e-6, 1.0 - 1e-6)
+    return quad + extra + (prior_a - 1.0) * jnp.log(g) + (prior_b - 1.0) * jnp.log1p(-g)
+
+
+def decode_attention_ref(
+    q: Array,  # (B, H, D)
+    k: Array,  # (B, S, KVH, D)
+    v: Array,  # (B, S, KVH, D)
+    length: Optional[Array] = None,  # (B,) valid cache lengths
+    scale: Optional[float] = None,
+) -> Array:
+    """Single-token GQA attention against a KV cache.  Returns (B, H, D)."""
+    b, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    groups = h // kvh
+    scale = (d**-0.5) if scale is None else scale
+
+    qg = q.reshape(b, kvh, groups, d)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    if length is not None:
+        pos = jnp.arange(s)
+        valid = pos[None, :] < length[:, None]  # (B, S)
+        logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def lru_scan_ref(a: Array, b: Array, h0: Array) -> Array:
+    """h_t = a_t * h_{t-1} + b_t via associative scan (log-depth oracle)."""
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    # fold h0 into the first step
+    b32 = b32.at[:, 0].add(a32[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    _, h = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    return h.astype(a.dtype)

@@ -1,0 +1,743 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first initialization).  Do not move them.
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Callable, Dict, List, Optional, Tuple  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as PS  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ARCHS,
+    SHAPES,
+    RunConfig,
+    applicable,
+    get_arch,
+    get_shape,
+)
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.launch.mesh import (  # noqa: E402
+    batch_axes as mesh_batch_axes,
+    make_production_mesh,
+    model_axis as mesh_model_axis,
+)
+from repro.models import model_zoo, transformer  # noqa: E402
+from repro.models.layers import ApplyCtx, MeshInfo  # noqa: E402
+from repro.models.params import abstract_params, axes_tree, stack_spec  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.train import serve_step as ss  # noqa: E402
+from repro.train import train_step as ts  # noqa: E402
+
+# Perf options toggled from the CLI (EXPERIMENTS.md §Perf A/B runs).
+OPTS = {"seq_shard_attention": False, "q_chunk": 2048, "remat": "full", "fsdp": True, "seq_parallel": False, "fuse_projections": False}
+
+# ---------------------------------------------------------------------------
+# TPU v5e hardware model (per chip)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+# `= f32[8,16]{1,0} all-reduce(` or `= (f32[2]{0}, f32[4]{0}) all-gather(`
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute-start|collective-permute)\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device collective payloads from post-SPMD HLO.
+
+    Traffic model: all-reduce counts 2x its result bytes (reduce-scatter +
+    all-gather phases of a ring); other collectives count 1x result bytes.
+    """
+    out = {k: 0 for k in _COLL_KINDS}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        b = _shape_bytes(type_str)
+        out[op] += 2 * b if op == "all-reduce" else b
+    return out
+
+
+def cost_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def mem_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": float(ma.argument_size_in_bytes),
+        "output_bytes": float(ma.output_size_in_bytes),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "alias_bytes": float(ma.alias_size_in_bytes),
+        "peak_bytes_est": float(
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes + ma.temp_size_in_bytes
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+
+def _bdims_for(mesh, dim_size):
+    """Data axes the batch dim divides; degrade gracefully (long_500k has
+    global_batch=1 -> replicate)."""
+    bdims = mesh_batch_axes(mesh)
+    while bdims:
+        n = 1
+        for a in bdims:
+            n *= mesh.shape[a]
+        if dim_size % n == 0:
+            return bdims
+        bdims = bdims[1:]  # drop 'pod' first, then give up
+    return None
+
+
+def batch_shardings(batch_abs, mesh, *, microbatched: bool = False):
+    """Serving batches shard dim0; train batches are (M, B/M, ...) -> dim1."""
+
+    def one(a):
+        d = 1 if microbatched else 0
+        bdims = _bdims_for(mesh, a.shape[d])
+        if bdims is None:
+            return NamedSharding(mesh, PS())
+        lead = (None, bdims) if microbatched else (bdims,)
+        return NamedSharding(mesh, PS(*lead, *([None] * (a.ndim - len(lead)))))
+
+    return jax.tree_util.tree_map(one, batch_abs)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, PS())
+
+
+def activation_sharding(mesh, ndim=3, batch_size=None):
+    bdims = (
+        mesh_batch_axes(mesh) if batch_size is None else _bdims_for(mesh, batch_size)
+    )
+    if bdims is None:
+        return NamedSharding(mesh, PS())
+    return NamedSharding(mesh, PS(bdims, *([None] * (ndim - 1))))
+
+
+# ---------------------------------------------------------------------------
+# unit compiles (single-pod cost decomposition)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class UnitResult:
+    name: str
+    trips: int
+    flops: float
+    bytes: float
+    coll: Dict[str, int]
+
+    def scaled(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops * self.trips,
+            "bytes": self.bytes * self.trips,
+            "coll": {k: v * self.trips for k, v in self.coll.items()},
+        }
+
+
+def compile_unit(name, trips, fn, args_abs, in_sh, mesh, donate=()) -> UnitResult:
+    lowered = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate).lower(*args_abs)
+    compiled = lowered.compile()
+    c = cost_dict(compiled)
+    coll = collective_bytes(compiled.as_text())
+    return UnitResult(name, trips, c["flops"], c["bytes"], coll)
+
+
+def _cycle_param_tools(cfg, mesh, *, fsdp=True):
+    """Abstract params + shardings for ONE cycle (list over pattern).
+
+    fsdp=False (serving): params replicated over the data axes, TP on model —
+    decode steps must not all-gather FSDP shards every token.
+    """
+    spec = [transformer.block_spec(cfg, k) for k in cfg.pattern]
+    dt = model_zoo.model_dtype(cfg)
+    rules = shd.default_rules(mesh, fsdp=fsdp)
+    p_abs = [abstract_params(s, dt) for s in spec]
+    axes = [axes_tree(s) for s in spec]
+    sh = [shd.tree_shardings(pa, ax, mesh, rules) for pa, ax in zip(p_abs, axes)]
+    return p_abs, sh
+
+
+def _cycle_cache_tools(cfg, mesh, batch, max_len):
+    dt = model_zoo.model_dtype(cfg)
+    caches = [
+        jax.eval_shape(
+            lambda k=k: transformer.init_block_cache(cfg, k, batch, max_len, dt)
+        )
+        for k in cfg.pattern
+    ]
+    axes = [transformer._block_cache_axes(cfg, k) for k in cfg.pattern]
+    sh = [shd.cache_shardings(c, a, mesh) for c, a in zip(caches, axes)]
+    return caches, sh
+
+
+def train_units(cfg, run, shape, mesh, M) -> List[UnitResult]:
+    fsdp = OPTS.get("fsdp", True)
+    mi = MeshInfo(mesh, mesh_batch_axes(mesh), mesh_model_axis(mesh))
+    ctx = ApplyCtx(mode="train", mesh_info=mi, unroll_chunks=True,
+                   remat=run.remat, q_chunk=OPTS["q_chunk"],
+                   seq_shard_attention=OPTS["seq_shard_attention"],
+                   seq_parallel=OPTS["seq_parallel"],
+                   fuse_projections=OPTS["fuse_projections"])
+    dt = model_zoo.model_dtype(cfg)
+    b_mb = shape.global_batch // M
+    t = shape.seq_len
+    if cfg.vision_patches:
+        t_text = t - cfg.vision_patches
+    else:
+        t_text = t
+    d = cfg.d_model
+    n_cycles, rest = transformer._cycles_and_rest(cfg)
+    units: List[UnitResult] = []
+
+    x_abs = jax.ShapeDtypeStruct((b_mb, t, d), dt)
+    x_sh = activation_sharding(mesh)
+    positions = jnp.arange(t)
+
+    # -- per-layer-cycle fwd+bwd
+    p_abs, p_sh = _cycle_param_tools(cfg, mesh, fsdp=fsdp)
+
+    enc_out_abs = None
+    if cfg.family == "encdec":
+        enc_out_abs = jax.ShapeDtypeStruct((b_mb, cfg.encoder_seq, d), dt)
+
+    def cycle_loss(cyc_params, x, enc_out=None):
+        def inner(cp, xx):
+            y, _, aux = transformer.apply_cycle(
+                cfg, cp, xx, ctx=ctx, positions=positions, enc_out=enc_out
+            )
+            return y, aux
+
+        if ctx.remat == "full":
+            inner = jax.checkpoint(inner, prevent_cse=False)
+        elif ctx.remat == "dots":
+            inner = jax.checkpoint(
+                inner, prevent_cse=False,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        elif ctx.remat == "outs":
+            inner = jax.checkpoint(
+                inner, prevent_cse=False,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    "attn_out", "mlp_out", "moe_recv", "moe_back"
+                ),
+            )
+        y, aux = inner(cyc_params, x)
+        return jnp.sum(y.astype(jnp.float32)) * 1e-6 + aux
+
+    if enc_out_abs is None:
+        vg = jax.value_and_grad(cycle_loss, argnums=(0, 1))
+        units.append(
+            compile_unit("cycle_vg", n_cycles * M, vg, (p_abs, x_abs), (p_sh, x_sh), mesh)
+        )
+    else:
+        vg = jax.value_and_grad(cycle_loss, argnums=(0, 1, 2))
+        units.append(
+            compile_unit(
+                "cycle_vg", n_cycles * M, vg,
+                (p_abs, x_abs, enc_out_abs), (p_sh, x_sh, x_sh), mesh,
+            )
+        )
+
+    # -- encoder cycles (whisper)
+    if cfg.family == "encdec":
+        from repro.models.encdec import encoder_cfg
+
+        ecfg = encoder_cfg(cfg)
+        ep_abs, ep_sh = _cycle_param_tools(ecfg, mesh, fsdp=fsdp)
+        ex_abs = jax.ShapeDtypeStruct((b_mb, cfg.encoder_seq, d), dt)
+        epos = jnp.arange(cfg.encoder_seq)
+
+        def enc_loss(cyc_params, x):
+            y, _, _ = transformer.apply_cycle(
+                ecfg, cyc_params, x, ctx=ctx, positions=epos
+            )
+            return jnp.sum(y.astype(jnp.float32)) * 1e-6
+
+        evg = jax.value_and_grad(enc_loss, argnums=(0, 1))
+        units.append(
+            compile_unit(
+                "enc_cycle_vg", ecfg.num_layers * M, evg,
+                (ep_abs, ex_abs), (ep_sh, x_sh), mesh,
+            )
+        )
+
+    # -- embed + head + loss fwd+bwd
+    hp_spec = {
+        "embed": transformer.lm_spec(cfg)["embed"],
+        "final_norm": transformer.rmsnorm_spec(d),
+    }
+    full_spec = transformer.lm_spec(cfg)
+    if "head" in full_spec:
+        hp_spec["head"] = full_spec["head"]
+    hp_abs = abstract_params(hp_spec, dt)
+    hp_sh = shd.tree_shardings(
+        hp_abs, axes_tree(hp_spec), mesh, shd.default_rules(mesh, fsdp=fsdp)
+    )
+    tok_abs = jax.ShapeDtypeStruct((b_mb, t_text), jnp.int32)
+    lab_abs = jax.ShapeDtypeStruct((b_mb, t_text), jnp.int32)
+    xt_abs = jax.ShapeDtypeStruct((b_mb, t_text, d), dt)
+    tok_sh = activation_sharding(mesh, 2)
+
+    def eh_loss(hp, tokens, labels, x):
+        e = transformer._embed(cfg, hp, tokens, None, ctx)
+        h = transformer.rmsnorm(hp["final_norm"], x + e, cfg.norm_eps)
+        logits = transformer._head(cfg, hp, h, ctx)
+        xent, _ = ts.cross_entropy(logits, labels, cfg.vocab_size)
+        return xent
+
+    ehvg = jax.value_and_grad(eh_loss, argnums=(0, 3))
+    units.append(
+        compile_unit(
+            "embed_head_vg", M, ehvg,
+            (hp_abs, tok_abs, lab_abs, xt_abs),
+            (hp_sh, tok_sh, tok_sh, x_sh), mesh,
+        )
+    )
+
+    # -- optimizer update (once per step)
+    params_abs = model_zoo.abstract_model_params(cfg)
+    p_axes = model_zoo.model_axes(cfg)
+    params_sh = shd.tree_shardings(
+        params_abs, p_axes, mesh, shd.default_rules(mesh, fsdp=fsdp)
+    )
+    opt_dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[run.optimizer_dtype]
+    opt_abs = adamw.abstract_state(params_abs, opt_dt)
+    opt_sh = adamw.AdamWState(m=params_sh, v=params_sh, count=replicated(mesh))
+    grad_dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[run.grad_dtype]
+    grads_abs = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, grad_dt), params_abs
+    )
+    opt_fn = ts.make_optimizer_unit(cfg, run)
+    units.append(
+        compile_unit(
+            "optimizer", 1, opt_fn,
+            (params_abs, opt_abs, grads_abs),
+            (params_sh, opt_sh, params_sh), mesh, donate=(0, 1),
+        )
+    )
+    return units
+
+
+def serve_units(cfg, shape, mesh, kind) -> List[UnitResult]:
+    mi = MeshInfo(mesh, mesh_batch_axes(mesh), mesh_model_axis(mesh))
+    mode = "prefill" if kind == "prefill" else "decode"
+    ctx = ApplyCtx(mode=mode, mesh_info=mi, unroll_chunks=True,
+                   q_chunk=OPTS["q_chunk"],
+                   seq_shard_attention=OPTS["seq_shard_attention"])
+    dt = model_zoo.model_dtype(cfg)
+    b = shape.global_batch
+    t = shape.seq_len if kind == "prefill" else 1
+    d = cfg.d_model
+    n_cycles, rest = transformer._cycles_and_rest(cfg)
+    units: List[UnitResult] = []
+
+    x_abs = jax.ShapeDtypeStruct((b, t, d), dt)
+    x_sh = activation_sharding(mesh, batch_size=b)
+    p_abs, p_sh = _cycle_param_tools(cfg, mesh, fsdp=False)
+    c_abs, c_sh = _cycle_cache_tools(cfg, mesh, b, shape.seq_len)
+
+    if kind == "prefill":
+        positions = jnp.arange(t)
+        length = None
+    else:
+        positions = jnp.full((1,), shape.seq_len - 1, jnp.int32)
+        length = jnp.asarray(shape.seq_len - 1, jnp.int32)
+
+    enc_out_abs = None
+    if cfg.family == "encdec" and kind == "prefill":
+        enc_out_abs = jax.ShapeDtypeStruct((b, cfg.encoder_seq, d), dt)
+
+    def cycle_fwd(cyc_params, x, caches, enc_out=None):
+        y, new_caches, _ = transformer.apply_cycle(
+            cfg, cyc_params, x, ctx=ctx, positions=positions,
+            length=length, caches=caches, enc_out=enc_out,
+        )
+        return y, new_caches
+
+    if enc_out_abs is None:
+        units.append(
+            compile_unit(
+                f"cycle_{mode}", n_cycles, cycle_fwd,
+                (p_abs, x_abs, c_abs), (p_sh, x_sh, c_sh), mesh, donate=(2,),
+            )
+        )
+    else:
+        units.append(
+            compile_unit(
+                f"cycle_{mode}", n_cycles, cycle_fwd,
+                (p_abs, x_abs, c_abs, enc_out_abs),
+                (p_sh, x_sh, c_sh, activation_sharding(mesh, batch_size=b)),
+                mesh, donate=(2,),
+            )
+        )
+
+    if cfg.family == "encdec" and kind == "prefill":
+        from repro.models.encdec import encoder_cfg
+
+        ecfg = encoder_cfg(cfg)
+        ep_abs, ep_sh = _cycle_param_tools(ecfg, mesh, fsdp=False)
+        ex_abs = jax.ShapeDtypeStruct((b, cfg.encoder_seq, d), dt)
+        epos = jnp.arange(cfg.encoder_seq)
+        ectx = dataclasses.replace(ctx, mode="train")
+
+        def enc_fwd(cyc_params, x):
+            y, _, _ = transformer.apply_cycle(ecfg, cyc_params, x, ctx=ectx, positions=epos)
+            return y
+
+        units.append(
+            compile_unit("enc_cycle_fwd", ecfg.num_layers, enc_fwd,
+                         (ep_abs, ex_abs), (ep_sh, x_sh), mesh)
+        )
+
+    # -- embed + head fwd
+    dt_ = dt
+    hp_spec = {
+        "embed": transformer.lm_spec(cfg)["embed"],
+        "final_norm": transformer.rmsnorm_spec(d),
+    }
+    full_spec = transformer.lm_spec(cfg)
+    if "head" in full_spec:
+        hp_spec["head"] = full_spec["head"]
+    hp_abs = abstract_params(hp_spec, dt_)
+    hp_sh = shd.tree_shardings(
+        hp_abs, axes_tree(hp_spec), mesh, shd.default_rules(mesh, fsdp=False)
+    )
+    tok_abs = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    tok_sh = activation_sharding(mesh, 2, batch_size=b)
+    x_last = jax.ShapeDtypeStruct((b, 1, d), dt_)
+    xl_sh = activation_sharding(mesh, batch_size=b)
+
+    def eh_fwd(hp, tokens, x):
+        e = transformer._embed(cfg, hp, tokens, None, ctx)
+        h = transformer.rmsnorm(hp["final_norm"], x + e[:, -1:], cfg.norm_eps)
+        logits = transformer._head(cfg, hp, h, ctx)
+        return jnp.argmax(logits, -1)
+
+    units.append(
+        compile_unit(
+            f"embed_head_{mode}", 1, eh_fwd,
+            (hp_abs, tok_abs, x_last), (hp_sh, tok_sh, xl_sh), mesh,
+        )
+    )
+    return units
+
+
+# ---------------------------------------------------------------------------
+# full-step compiles (sharding proof + memory analysis)
+# ---------------------------------------------------------------------------
+
+
+def full_compile(cfg, run, shape, mesh) -> Tuple[Dict[str, Any], Any]:
+    mi = MeshInfo(mesh, mesh_batch_axes(mesh), mesh_model_axis(mesh))
+    dp = 1
+    for a in mesh_batch_axes(mesh):
+        dp *= mesh.shape[a]
+
+    params_abs = model_zoo.abstract_model_params(cfg)
+    params_sh = shd.tree_shardings(
+        params_abs, model_zoo.model_axes(cfg), mesh,
+        shd.default_rules(
+            mesh, fsdp=(shape.kind == "train" and OPTS.get("fsdp", True))
+        ),
+    )
+
+    if shape.kind == "train":
+        ctx = ApplyCtx(mode="train", mesh_info=mi, remat=run.remat,
+                       q_chunk=OPTS["q_chunk"],
+                       seq_shard_attention=OPTS["seq_shard_attention"],
+                       seq_parallel=OPTS["seq_parallel"],
+                       fuse_projections=OPTS["fuse_projections"])
+        m = max(shape.global_batch // dp, 1)
+        batch_abs = model_zoo.input_specs(cfg, shape, num_microbatches=m)
+        batch_sh = batch_shardings(batch_abs, mesh, microbatched=True)
+        step_fn = ts.make_train_step(cfg, run, ctx=ctx, num_microbatches=m)
+        opt_dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[run.optimizer_dtype]
+        opt_abs = adamw.abstract_state(params_abs, opt_dt)
+        opt_sh = adamw.AdamWState(m=params_sh, v=params_sh, count=replicated(mesh))
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = jax.jit(
+            step_fn,
+            in_shardings=(params_sh, opt_sh, batch_sh, replicated(mesh)),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        ).lower(params_abs, opt_abs, batch_abs, step_abs)
+        extra = {"num_microbatches": m}
+    elif shape.kind == "prefill":
+        ctx = ApplyCtx(mode="prefill", mesh_info=mi, q_chunk=OPTS["q_chunk"],
+                       seq_shard_attention=OPTS["seq_shard_attention"])
+        fn = ss.make_prefill_step(cfg, ctx=ctx)
+        batch_abs = model_zoo.input_specs(cfg, shape)
+        batch_sh = batch_shardings(batch_abs, mesh)
+        cache_abs = model_zoo.abstract_cache(cfg, shape)
+        cache_sh = shd.cache_shardings(
+            cache_abs, transformer.cache_axes_tree(cfg), mesh
+        )
+        lowered = jax.jit(
+            fn,
+            in_shardings=(params_sh, batch_sh, cache_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(2,),
+        ).lower(params_abs, batch_abs, cache_abs)
+        extra = {}
+    else:  # decode
+        ctx = ApplyCtx(mode="decode", mesh_info=mi)
+        fn = ss.make_decode_step(cfg, ctx=ctx)
+        batch_abs = model_zoo.input_specs(cfg, shape)
+        cache_abs = model_zoo.abstract_cache(cfg, shape)
+        cache_sh = shd.cache_shardings(
+            cache_abs, transformer.cache_axes_tree(cfg), mesh
+        )
+        tok_abs = batch_abs["token"]
+        tok_sh = batch_shardings(tok_abs, mesh)
+        lowered = jax.jit(
+            fn,
+            in_shardings=(params_sh, tok_sh, cache_sh),
+            out_shardings=(tok_sh, cache_sh),
+            donate_argnums=(2,),
+        ).lower(params_abs, tok_abs, cache_abs)
+        extra = {}
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    extra["compile_seconds"] = round(time.time() - t0, 1)
+    result = {
+        "memory": mem_dict(compiled),
+        "full_cost_scan_body_once": cost_dict(compiled),
+        "full_coll_scan_body_once": collective_bytes(compiled.as_text()),
+        **extra,
+    }
+    return result, compiled
+
+
+# ---------------------------------------------------------------------------
+# roofline assembly
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg, shape) -> float:
+    n_act = model_zoo.param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * shape.global_batch  # decode: one token per sequence
+
+
+def assemble(units: List[UnitResult], chips: int, shape, cfg) -> Dict[str, Any]:
+    tot_flops = sum(u.scaled()["flops"] for u in units)
+    tot_bytes = sum(u.scaled()["bytes"] for u in units)
+    tot_coll: Dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+    for u in units:
+        for k, v in u.scaled()["coll"].items():
+            tot_coll[k] += v
+    coll_bytes = sum(tot_coll.values())
+
+    compute_s = tot_flops / PEAK_FLOPS  # per-device quantities
+    memory_s = tot_bytes / HBM_BW
+    coll_s = coll_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_flops_global = tot_flops * chips
+    return {
+        "per_device": {
+            "flops": tot_flops,
+            "bytes": tot_bytes,
+            "collective_bytes": coll_bytes,
+            "collective_breakdown": tot_coll,
+        },
+        "terms_seconds": terms,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "model_over_hlo": mf / hlo_flops_global if hlo_flops_global else 0.0,
+        "roofline_bound_s": max(terms.values()),
+        "units": [
+            {"name": u.name, "trips": u.trips, "flops": u.flops,
+             "bytes": u.bytes, "coll": u.coll}
+            for u in units
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    out_dir: pathlib.Path,
+    *,
+    with_units: bool = True,
+    force: bool = False,
+) -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    if OPTS.get("capacity_factor"):
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, capacity_factor=OPTS["capacity_factor"])
+    shape = get_shape(shape_name)
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    out_path = out_dir / f"{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    if not applicable(cfg, shape):
+        res = {"cell": tag, "skipped": "long_500k requires sub-quadratic decode"}
+        out_path.write_text(json.dumps(res, indent=1))
+        return res
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.size
+    opt_dtype = (
+        "bfloat16" if model_zoo.param_count(cfg) > 2e11 else "float32"
+    )
+    run = RunConfig(model=cfg, shape=shape, optimizer_dtype=opt_dtype,
+                    remat=OPTS.get("remat", "full"),
+                    grad_dtype=OPTS.get("grad_dtype") or "float32")
+    t0 = time.time()
+    res: Dict[str, Any] = {"cell": tag, "chips": chips,
+                           "mesh": dict(zip(mesh.axis_names, mesh.devices.shape))}
+    with mesh:
+        full, compiled = full_compile(cfg, run, shape, mesh)
+        res["full"] = full
+        del compiled
+        if with_units and mesh_kind == "single":
+            if shape.kind == "train":
+                m = full.get("num_microbatches", 1)
+                units = train_units(cfg, run, shape, mesh, m)
+            else:
+                units = serve_units(cfg, shape, mesh, shape.kind)
+            res["roofline"] = assemble(units, chips, shape, cfg)
+    res["wall_seconds"] = round(time.time() - t0, 1)
+    out_path.write_text(json.dumps(res, indent=1))
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run + roofline")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-units", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--seq-shard-attention", action="store_true",
+                    help="context-parallel attention chunks (perf A/B)")
+    ap.add_argument("--q-chunk", type=int, default=2048)
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "none", "dots", "outs"])
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="replicate params over data axes (ZeRO-1; small models)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="Megatron sequence parallelism on the residual stream")
+    ap.add_argument("--fuse-projections", action="store_true",
+                    help="fused qkv + gate/up projections (1 dx all-reduce)")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="override MoE capacity factor")
+    ap.add_argument("--grad-dtype", default=None,
+                    choices=["float32", "bfloat16"])
+    args = ap.parse_args()
+
+    OPTS["seq_shard_attention"] = args.seq_shard_attention
+    OPTS["q_chunk"] = args.q_chunk
+    OPTS["remat"] = args.remat
+    OPTS["fsdp"] = not args.no_fsdp
+    OPTS["seq_parallel"] = args.seq_parallel
+    OPTS["fuse_projections"] = args.fuse_projections
+    OPTS["capacity_factor"] = args.capacity_factor
+    OPTS["grad_dtype"] = args.grad_dtype
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                tag = f"{a}__{s}__{m}"
+                try:
+                    res = run_cell(
+                        a, s, m, out_dir,
+                        with_units=not args.no_units, force=args.force,
+                    )
+                    if "skipped" in res:
+                        print(f"[skip] {tag}: {res['skipped']}", flush=True)
+                        continue
+                    mem = res["full"]["memory"]["peak_bytes_est"] / 2**30
+                    dom = res.get("roofline", {}).get("dominant", "-")
+                    bound = res.get("roofline", {}).get("roofline_bound_s", 0.0)
+                    print(
+                        f"[ok]   {tag}: peak/dev={mem:.2f}GiB "
+                        f"dominant={dom} bound={bound*1e3:.2f}ms "
+                        f"wall={res.get('wall_seconds', 0)}s",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    failures.append(tag)
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+    print("dry-run complete: all cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

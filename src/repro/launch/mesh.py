@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Functions (not module constants) so importing never touches jax device state.
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi pod:  2x16x16 = 512 chips, axes (pod, data, model) — the pod axis is an
+additional pure-data-parallel dimension across ICI-disjoint pods (DCN).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist locally, as a 1-D data mesh (CPU tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh: jax.sharding.Mesh):
+    return "model" if "model" in mesh.axis_names else None

@@ -1,0 +1,15 @@
+"""Model substrate: layers, MoE, recurrent mixers, unified assembly, zoo."""
+from . import encdec, layers, model_zoo, moe, params, recurrent, transformer
+from .layers import ApplyCtx, MeshInfo
+
+__all__ = [
+    "ApplyCtx",
+    "MeshInfo",
+    "encdec",
+    "layers",
+    "model_zoo",
+    "moe",
+    "params",
+    "recurrent",
+    "transformer",
+]

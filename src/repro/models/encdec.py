@@ -1,0 +1,59 @@
+"""Encoder-decoder assembly (whisper-style).
+
+The audio/conv frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, encoder_seq, d_model) from ``input_specs``.
+Encoder = full-attention blocks; decoder = causal self-attn + cross-attn
+("xdec" blocks in transformer.py).  Rotary positions replace whisper's
+sinusoidal embeddings (TPU-native simplification, noted in DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import ApplyCtx, rmsnorm, rmsnorm_spec
+from .params import P, stack_spec
+from .transformer import _run_stack, block_spec
+
+Array = jax.Array
+
+
+def encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, num_layers=cfg.encoder_layers, layer_pattern=("enc",)
+    )
+
+
+def encoder_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    ecfg = encoder_cfg(cfg)
+    d = cfg.d_model
+    return {
+        "in_proj": P((d, d), ("embed", None)),
+        "cycles": [stack_spec(block_spec(ecfg, "enc"), ecfg.num_layers)],
+        "rest": [],
+        "final_norm": rmsnorm_spec(d),
+    }
+
+
+def encode(
+    cfg: ModelConfig,
+    enc_params: Dict[str, Any],
+    frames: Array,  # (B, encoder_seq, d_model) precomputed embeddings (stub)
+    *,
+    ctx: ApplyCtx,
+) -> Array:
+    ecfg = encoder_cfg(cfg)
+    x = frames.astype(enc_params["in_proj"].dtype) @ enc_params["in_proj"]
+    positions = jnp.arange(x.shape[1])
+    # encoder always runs full-sequence (even when the decoder decodes)
+    enc_ctx = dataclasses.replace(ctx, mode="train")
+    x, _, _ = _run_stack(
+        ecfg, enc_params, x, ctx=enc_ctx, positions=positions,
+        length=None, cache=None,
+    )
+    return rmsnorm(enc_params["final_norm"], x, cfg.norm_eps)

@@ -1,0 +1,483 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (causal / local /
+full / cross; train / prefill / decode), gated MLPs.
+
+Attention memory discipline: for long sequences the (T, T) logits never
+materialize — queries are processed in chunks.  The chunk loop runs as
+``lax.scan`` in normal execution (small HLO, VMEM-bounded working set) or as
+an unrolled Python loop (``unroll_chunks=True``) in the dry-run's unit-cost
+compiles, where XLA's cost model must see every chunk (while-loop bodies are
+counted once by HLO cost analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .params import P
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+class MeshInfo(NamedTuple):
+    """Distribution context threaded through the model (None on 1 device)."""
+
+    mesh: Any  # jax.sharding.Mesh
+    batch_axes: Tuple[str, ...]  # ("pod", "data") or ("data",)
+    model_axis: Optional[str]  # "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class ApplyCtx:
+    """Per-call context: execution mode and distribution info."""
+
+    mode: str = "train"  # train | prefill | decode
+    mesh_info: Optional[MeshInfo] = None
+    unroll_chunks: bool = False  # dry-run unit-cost compiles
+    q_chunk: int = 2048
+    remat: str = "none"  # layer-cycle remat: none | full | dots
+    # ("dots" saves weight-matmul outputs — backward does NOT recompute the
+    #  TP collectives — while attention internals/elementwise are recomputed)
+    # Beyond-paper perf options (EXPERIMENTS.md §Perf):
+    # shard attention query-chunks over the model axis — turns the replicated
+    # attention of unshardable-head models (smollm 9H, xlstm 4H) into 1/M
+    # work per shard (context parallelism); K/V stay replicated (small w/ GQA)
+    seq_shard_attention: bool = False
+    # Megatron-style sequence parallelism: the residual stream between blocks
+    # is sharded over (model, seq); GSPMD turns the TP all-reduces into
+    # bf16 all-gather + reduce-scatter pairs (half the f32-all-reduce bytes,
+    # and norms/elementwise run 1/M per shard)
+    seq_parallel: bool = False
+    # fuse q/k/v (and mlp gate/up) projections at apply time: the backward
+    # dx partial-sums are added BEFORE the tensor-parallel all-reduce —
+    # one (B,T,D) reduction instead of three (resp. two)
+    fuse_projections: bool = False
+
+
+def constrain_batch(x: Array, ctx: "ApplyCtx", tail=None) -> Array:
+    """Pin the batch dim to the data axes (activation sharding constraint).
+
+    Without this GSPMD is free to re-shard activations after the embedding
+    gather (it tends to follow the table's embed-dim sharding), replicating
+    the batch across data shards — catastrophic for attention temps.
+    """
+    mi = ctx.mesh_info
+    if mi is None or not mi.batch_axes:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+
+    spec_tail = tail if tail is not None else [None] * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mi.mesh, PS(mi.batch_axes, *spec_tail))
+    )
+
+
+# ---------------------------------------------------------------------------
+# norms / activations / rope
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> Dict[str, P]:
+    return {"scale": P((d,), ("embed",), init="ones")}
+
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=None)
+def _make_rmsnorm(eps: float, dtype_name: str):
+    """custom_vjp rmsnorm specialized on (eps, activation dtype).
+
+    Backward runs in f32 math but dx is RETURNED in the activation dtype —
+    the tensor-parallel dx all-reduces then move bf16, not f32 (standard
+    mixed-precision practice; halves the dominant collective payload).
+    """
+    dt = jnp.dtype(dtype_name)
+
+    def fwd_math(scale, x):
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps)
+        y = (x32 * inv * scale.astype(jnp.float32)).astype(dt)
+        return y, (x32, inv)
+
+    @jax.custom_vjp
+    def f(scale, x):
+        return fwd_math(scale, x)[0]
+
+    def f_fwd(scale, x):
+        y, (x32, inv) = fwd_math(scale, x)
+        return y, (scale, x32, inv)
+
+    def f_bwd(res, dy):
+        scale, x32, inv = res
+        dy32 = dy.astype(jnp.float32)
+        xhat = x32 * inv
+        dscale = jnp.sum(dy32 * xhat, axis=tuple(range(dy.ndim - 1)))
+        g = dy32 * scale.astype(jnp.float32)
+        dx = inv * (g - xhat * jnp.mean(g * xhat, axis=-1, keepdims=True))
+        return dscale.astype(scale.dtype), dx.astype(dt)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+def rmsnorm(params: Dict[str, Array], x: Array, eps: float) -> Array:
+    return _make_rmsnorm(float(eps), jnp.dtype(x.dtype).name)(params["scale"], x)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: (..., T, H, hd); positions: (..., T) or (T,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def activate(act: str, gate: Array, up: Array) -> Array:
+    if act == "swiglu":
+        return jax.nn.silu(gate) * up
+    if act == "geglu":
+        return jax.nn.gelu(gate) * up
+    if act == "gelu":
+        return jax.nn.gelu(gate)  # non-gated: 'up' unused by caller
+    raise ValueError(act)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(cfg: ModelConfig) -> Dict[str, P]:
+    d, f = cfg.d_model, cfg.d_ff
+    gated = cfg.act in ("swiglu", "geglu")
+    spec = {
+        "wi": P((d, f), ("embed", "mlp")),
+        "wo": P((f, d), ("mlp", "embed")),
+    }
+    if gated:
+        spec["wg"] = P((d, f), ("embed", "mlp"))
+    if cfg.use_bias:
+        spec["bi"] = P((f,), ("mlp",), init="zeros")
+        spec["bo"] = P((d,), ("embed",), init="zeros")
+    return spec
+
+
+def mlp(
+    cfg: ModelConfig, params: Dict[str, Array], x: Array,
+    ctx: Optional["ApplyCtx"] = None,
+) -> Array:
+    gated = cfg.act in ("swiglu", "geglu")
+    if ctx is not None and ctx.fuse_projections and gated:
+        f = cfg.d_ff
+        both = x @ jnp.concatenate([params["wi"], params["wg"]], axis=1)
+        up, gate = both[..., :f], both[..., f:]
+        if cfg.use_bias:
+            up = up + params["bi"]
+        h = activate(cfg.act, gate, up)
+    else:
+        up = x @ params["wi"]
+        if cfg.use_bias:
+            up = up + params["bi"]
+        if gated:
+            h = activate(cfg.act, x @ params["wg"], up)
+        else:
+            h = activate(cfg.act, up, up)
+    y = h @ params["wo"]
+    if cfg.use_bias:
+        y = y + params["bo"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_spec(cfg: ModelConfig, cross: bool = False) -> Dict[str, P]:
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    spec = {
+        "wq": P((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": P((d, kvh, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, kvh, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.use_bias:
+        spec["bq"] = P((h, hd), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = P((kvh, hd), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = P((kvh, hd), ("kv_heads", "head_dim"), init="zeros")
+    return spec
+
+
+def _seq_shard(x: Array, ctx: "ApplyCtx", dim: int) -> Array:
+    """Constrain dim to be sharded over the model axis (context parallelism),
+    when enabled and divisible."""
+    mi = ctx.mesh_info
+    if not ctx.seq_shard_attention or mi is None or mi.model_axis is None:
+        return x
+    m = mi.mesh.shape[mi.model_axis]
+    if x.shape[dim] % m != 0:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+
+    spec = [None] * x.ndim
+    spec[0] = mi.batch_axes if x.shape[0] % max(
+        1, _prod(mi.mesh.shape[a] for a in mi.batch_axes)
+    ) == 0 else None
+    spec[dim] = mi.model_axis
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mi.mesh, PS(*spec)))
+
+
+def _prod(it):
+    n = 1
+    for v in it:
+        n *= v
+    return n
+
+
+def _attn_chunk(
+    q: Array,  # (B, qc, KVH, G, hd) f32-scaled
+    k: Array,  # (B, S, KVH, hd)
+    v: Array,  # (B, S, KVH, hd)
+    mask: Array,  # (qc, S) or (B, qc, S) additive
+    ctx: Optional["ApplyCtx"] = None,
+) -> Array:
+    if ctx is not None:
+        q = _seq_shard(q, ctx, 1)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32
+    )
+    while mask.ndim < logits.ndim:
+        mask = mask[None]
+    logits = logits + mask
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
+    if ctx is not None:
+        out = _seq_shard(out, ctx, 1)
+    return out
+
+
+def _full_attention(
+    cfg: ModelConfig,
+    q: Array,  # (B, T, H, hd) post-rope
+    k: Array,  # (B, S, KVH, hd) post-rope
+    v: Array,
+    *,
+    causal: bool,
+    window: int,
+    q_positions: Array,  # (T,)
+    kv_positions: Array,  # (S,)
+    ctx: ApplyCtx,
+) -> Array:
+    """Chunked-query attention; returns (B, T, H, hd)."""
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    kvh = cfg.num_kv_heads
+    g = h // kvh
+    scale = hd**-0.5
+
+    qg = (q * scale).reshape(b, t, kvh, g, hd).astype(jnp.float32)
+    k32 = k.astype(jnp.float32)
+
+    def mask_for(qpos: Array) -> Array:
+        rel = qpos[:, None] - kv_positions[None, :]  # (qc, S)
+        ok = jnp.ones(rel.shape, bool)
+        if causal:
+            ok &= rel >= 0
+        if window > 0:
+            ok &= rel < window
+        return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+    chunk = min(ctx.q_chunk, t)
+    if t % chunk != 0:
+        chunk = t  # fall back to single chunk for ragged tiny cases
+    n_chunks = t // chunk
+
+    if n_chunks == 1:
+        out = _attn_chunk(qg, k32, v, mask_for(q_positions), ctx)
+        return out.reshape(b, t, h, hd).astype(q.dtype)
+
+    qg_c = qg.reshape(b, n_chunks, chunk, kvh, g, hd)
+    qpos_c = q_positions.reshape(n_chunks, chunk)
+
+    if ctx.unroll_chunks:
+        outs = [
+            _attn_chunk(qg_c[:, i], k32, v, mask_for(qpos_c[i]), ctx)
+            for i in range(n_chunks)
+        ]
+        out = jnp.stack(outs, axis=1)
+    else:
+        def body(_, inp):
+            qc, qp = inp
+            return None, _attn_chunk(qc, k32, v, mask_for(qp), ctx)
+
+        _, out = jax.lax.scan(
+            body, None, (jnp.moveaxis(qg_c, 1, 0), qpos_c)
+        )
+        out = jnp.moveaxis(out, 0, 1)
+    return out.reshape(b, t, h, hd).astype(q.dtype)
+
+
+def init_attention_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype, window: int = 0
+) -> Dict[str, Array]:
+    s = min(window, max_len) if window > 0 else max_len
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, s, kvh, hd), dtype),
+        "v": jnp.zeros((batch, s, kvh, hd), dtype),
+    }
+
+
+def attention(
+    cfg: ModelConfig,
+    params: Dict[str, Array],
+    x: Array,  # (B, T, D)
+    *,
+    ctx: ApplyCtx,
+    causal: bool = True,
+    window: int = 0,
+    positions: Optional[Array] = None,  # (T,) absolute positions
+    length: Optional[Array] = None,  # scalar: tokens already in cache
+    cache: Optional[Dict[str, Array]] = None,
+    kv_x: Optional[Array] = None,  # cross-attention source (B, Senc, D)
+    use_rope: bool = True,
+    is_cross: bool = False,  # explicit: decode reads the prefilled cross cache
+) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """GQA attention for all modes.  Returns (y, updated_cache)."""
+    b, t, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    cross = is_cross or (kv_x is not None)
+
+    if (
+        ctx.fuse_projections
+        and not cross
+        and params["wq"].shape[-1] == params["wk"].shape[-1]
+    ):
+        # fused qkv: single column-parallel matmul -> one dx all-reduce
+        wqkv = jnp.concatenate(
+            [params["wq"], params["wk"], params["wv"]], axis=1
+        )  # (D, H + 2*KVH, hd)
+        qkv = jnp.einsum("btd,dhk->bthk", x, wqkv)
+        q = qkv[:, :, :h]
+        k = qkv[:, :, h : h + kvh]
+        v = qkv[:, :, h + kvh :]
+        if cfg.use_bias:
+            q = q + params["bq"]
+            k = k + params["bk"]
+            v = v + params["bv"]
+    else:
+        q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+        if cfg.use_bias:
+            q = q + params["bq"]
+
+        if cross and kv_x is None:
+            # decode against a prefilled cross cache: no new k/v are produced
+            k = v = None
+        else:
+            kv_src = x if kv_x is None else kv_x
+            k = jnp.einsum("btd,dhk->bthk", kv_src, params["wk"])
+            v = jnp.einsum("btd,dhk->bthk", kv_src, params["wv"])
+            if cfg.use_bias:
+                k = k + params["bk"]
+                v = v + params["bv"]
+
+    if positions is None:
+        positions = jnp.arange(t)
+    if use_rope and not cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    elif use_rope and cross:
+        q = rope(q, positions, cfg.rope_theta)
+        # cross keys keep the encoder's own (non-rotary) representation
+
+    if ctx.mode != "decode" and cross and kv_x is None:
+        raise ValueError("cross attention outside decode requires kv_x (enc_out)")
+
+    new_cache = cache
+    if ctx.mode == "train":
+        kv_pos = jnp.arange(k.shape[1])
+        out = _full_attention(
+            cfg, q, k, v, causal=causal and not cross, window=window,
+            q_positions=positions, kv_positions=kv_pos, ctx=ctx,
+        )
+    elif ctx.mode == "prefill":
+        kv_pos = jnp.arange(k.shape[1])
+        out = _full_attention(
+            cfg, q, k, v, causal=causal and not cross, window=window,
+            q_positions=positions, kv_positions=kv_pos, ctx=ctx,
+        )
+        if cache is not None and not cross:
+            s_cache = cache["k"].shape[1]
+            if window > 0 and k.shape[1] > s_cache:
+                # keep the trailing window, placed at ring slots pos % s_cache
+                shift = (k.shape[1] - s_cache) % s_cache
+                k_w = jnp.roll(k[:, -s_cache:], shift, axis=1)
+                v_w = jnp.roll(v[:, -s_cache:], shift, axis=1)
+                new_cache = {"k": k_w.astype(cache["k"].dtype), "v": v_w.astype(cache["v"].dtype)}
+            else:
+                pad = s_cache - k.shape[1]
+                new_cache = {
+                    "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["k"].dtype),
+                    "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["v"].dtype),
+                }
+        elif cache is not None and cross:
+            new_cache = {"k": k.astype(cache["k"].dtype), "v": v.astype(cache["v"].dtype)}
+    elif ctx.mode == "decode":
+        assert cache is not None and length is not None
+        if cross:
+            k_all, v_all = cache["k"], cache["v"]
+            s = k_all.shape[1]
+            valid = jnp.ones((s,), bool)
+            kv_pos = jnp.arange(s)
+        else:
+            s = cache["k"].shape[1]
+            if window > 0:
+                slot = length % s
+                write_pos = slot
+            else:
+                write_pos = length
+            k_new = k[:, 0].astype(cache["k"].dtype)  # (B, KVH, hd)
+            v_new = v[:, 0].astype(cache["v"].dtype)
+            k_all = jax.lax.dynamic_update_index_in_dim(cache["k"], k_new, write_pos, 1)
+            v_all = jax.lax.dynamic_update_index_in_dim(cache["v"], v_new, write_pos, 1)
+            new_cache = {"k": k_all, "v": v_all}
+            if window > 0:
+                # ring buffer: slot i holds absolute position derived from length
+                idx = jnp.arange(s)
+                slot = length % s
+                kv_pos = jnp.where(idx <= slot, length - (slot - idx), length - (slot - idx) - s)
+                valid = (kv_pos >= 0) & (kv_pos >= length - window + 1)
+            else:
+                kv_pos = jnp.arange(s)
+                valid = kv_pos <= length
+        # single-token attention over the cache
+        g = h // kvh
+        scale = hd**-0.5
+        qg = (q[:, 0] * scale).reshape(b, kvh, g, hd).astype(jnp.float32)
+        logits = jnp.einsum(
+            "bkgd,bskd->bkgs", qg, k_all.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgs,bskd->bkgd", w.astype(v_all.dtype), v_all)
+        out = out.reshape(b, 1, h, hd)
+    else:
+        raise ValueError(ctx.mode)
+
+    y = jnp.einsum("bthk,hkd->btd", out.astype(x.dtype), params["wo"])
+    return y, new_cache

@@ -1,0 +1,185 @@
+"""Model zoo: config -> spec/params/apply, analytic parameter counts, and the
+input-spec factory used by smoke tests, the trainer, and the dry-run."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+from . import encdec, transformer
+from .layers import ApplyCtx
+from .params import (
+    P,
+    abstract_params,
+    axes_tree,
+    init_params,
+    param_count as spec_param_count,
+    tree_map_spec,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# spec / params
+# ---------------------------------------------------------------------------
+
+
+def model_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    spec = transformer.lm_spec(cfg)
+    if cfg.family == "encdec":
+        spec["encoder"] = encdec.encoder_spec(cfg)
+    return spec
+
+
+def model_dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def init_model_params(key: Array, cfg: ModelConfig):
+    return init_params(key, model_spec(cfg), model_dtype(cfg))
+
+
+def abstract_model_params(cfg: ModelConfig):
+    return abstract_params(model_spec(cfg), model_dtype(cfg))
+
+
+def model_axes(cfg: ModelConfig):
+    return axes_tree(model_spec(cfg))
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count from the spec tree.
+
+    active_only: count each MoE expert tensor at k/E of its size (the
+    per-token-active parameters used for MODEL_FLOPS = 6 * N_active * D).
+    """
+    spec = model_spec(cfg)
+    if not active_only or cfg.num_experts == 0:
+        return spec_param_count(spec)
+
+    frac = cfg.experts_per_token / cfg.num_experts
+
+    def leaf_count(p: P) -> float:
+        n = 1
+        for s in p.shape:
+            n *= s
+        if "experts" in p.axes:
+            return n * frac
+        return n
+
+    leaves = jax.tree_util.tree_leaves(
+        tree_map_spec(leaf_count, spec)
+    )
+    return int(sum(leaves))
+
+
+# ---------------------------------------------------------------------------
+# unified apply (dispatches enc-dec vs decoder-only)
+# ---------------------------------------------------------------------------
+
+
+def forward_train(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, Array],
+    *,
+    ctx: ApplyCtx,
+) -> Tuple[Array, Array]:
+    """(logits, aux_loss) for a training batch dict."""
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encdec.encode(cfg, params["encoder"], batch["frames"], ctx=ctx)
+    return transformer.forward_train(
+        cfg, params, batch["tokens"], ctx=ctx,
+        vision=batch.get("vision"), enc_out=enc_out,
+    )
+
+
+def prefill(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, Array],
+    cache,
+    *,
+    ctx: ApplyCtx,
+):
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encdec.encode(cfg, params["encoder"], batch["frames"], ctx=ctx)
+    return transformer.prefill(
+        cfg, params, batch["tokens"], cache, ctx=ctx,
+        vision=batch.get("vision"), enc_out=enc_out,
+    )
+
+
+def decode_step(cfg: ModelConfig, params, token: Array, cache, *, ctx: ApplyCtx):
+    return transformer.decode_step(cfg, params, token, cache, ctx=ctx)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or model_dtype(cfg)
+    return transformer.init_cache(cfg, batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — dry-run / trainer plumbing)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, num_microbatches: int = 1
+) -> Dict[str, Any]:
+    """Abstract inputs for one (arch, shape) cell.
+
+    train:   {tokens, labels[, vision][, frames]} — shaped (M, B/M, ...) when
+             num_microbatches=M > 1 (dim 1 is the data-sharded batch dim).
+    prefill: {tokens[, vision][, frames]}
+    decode:  {token} (+ the cache, built separately via ``abstract_cache``)
+    """
+    b = shape.global_batch
+    t = shape.seq_len
+    i32 = jnp.int32
+    f = jnp.float32
+
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        m = num_microbatches
+        assert b % m == 0
+        lead = (m, b // m)  # always microbatched: (M, B/M)
+        text = t
+        if cfg.vision_patches:
+            text = t - cfg.vision_patches
+            specs["vision"] = jax.ShapeDtypeStruct(
+                (*lead, cfg.vision_patches, cfg.d_model), f
+            )
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (*lead, cfg.encoder_seq, cfg.d_model), f
+            )
+        specs["tokens"] = jax.ShapeDtypeStruct((*lead, text), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((*lead, text), i32)
+    elif shape.kind == "prefill":
+        text = t
+        if cfg.vision_patches:
+            text = t - cfg.vision_patches
+            specs["vision"] = jax.ShapeDtypeStruct((b, cfg.vision_patches, cfg.d_model), f)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), f)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, text), i32)
+    elif shape.kind == "decode":
+        specs["token"] = jax.ShapeDtypeStruct((b, 1), i32)
+    else:
+        raise ValueError(shape.kind)
+    return specs
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    """Shape-only decode cache (seq_len-deep) for the decode cells."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+    )

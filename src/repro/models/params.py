@@ -1,0 +1,93 @@
+"""Lightweight parameter-spec system (no flax dependency).
+
+A model is described by a nested dict of ``P`` leaves (shape + logical axes +
+init).  From one spec tree we derive:
+
+  * materialized parameters          (``init_params``)
+  * abstract ShapeDtypeStructs       (``abstract_params`` — dry-run, no alloc)
+  * the logical-axes tree            (``axes_tree`` — sharding rules input)
+
+Logical axis names (consumed by ``repro.distributed.sharding``):
+  vocab, embed, mlp, heads, kv_heads, head_dim, experts, rnn, cell, layers
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+SpecTree = Any  # nested dict of P
+ParamTree = Any  # nested dict of arrays
+
+
+class P(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 0.02
+
+    def stacked(self, n: int, axis_name: str = "layers") -> "P":
+        return P((n, *self.shape), (axis_name, *self.axes), self.init, self.scale)
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_spec(fn, spec: SpecTree):
+    return jax.tree_util.tree_map(fn, spec, is_leaf=_is_leaf)
+
+
+def stack_spec(spec: SpecTree, n: int, axis_name: str = "layers") -> SpecTree:
+    """Add a leading stacked axis to every leaf (scan-over-layers storage)."""
+    return tree_map_spec(lambda p: p.stacked(n, axis_name), spec)
+
+
+def init_params(key: Array, spec: SpecTree, dtype=jnp.float32) -> ParamTree:
+    leaves, treedef = jax.tree_util.tree_flatten(spec, is_leaf=_is_leaf)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def make(p: P, k: Array) -> Array:
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dtype)
+        return (p.scale * jax.random.normal(k, p.shape)).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [make(p, k) for p, k in zip(leaves, keys)]
+    )
+
+
+def abstract_params(spec: SpecTree, dtype=jnp.float32) -> ParamTree:
+    """ShapeDtypeStruct stand-ins — used by the dry-run (no allocation)."""
+    return tree_map_spec(lambda p: jax.ShapeDtypeStruct(p.shape, dtype), spec)
+
+
+def axes_tree(spec: SpecTree):
+    """Tree of logical-axes tuples, parallel to the param tree."""
+    return tree_map_spec(lambda p: p.axes, spec)
+
+
+def param_bytes(spec: SpecTree, bytes_per_elem: int = 2) -> int:
+    leaves = jax.tree_util.tree_leaves(spec, is_leaf=_is_leaf)
+    total = 0
+    for p in leaves:
+        n = 1
+        for s in p.shape:
+            n *= s
+        total += n * bytes_per_elem
+    return total
+
+
+def param_count(spec: SpecTree) -> int:
+    leaves = jax.tree_util.tree_leaves(spec, is_leaf=_is_leaf)
+    total = 0
+    for p in leaves:
+        n = 1
+        for s in p.shape:
+            n *= s
+        total += n
+    return total

@@ -1,0 +1,351 @@
+"""Recurrent sequence mixers: mLSTM / sLSTM (xLSTM) and RG-LRU (Griffin).
+
+Training/prefill forms:
+  * mLSTM — stabilized *parallel* (quadratic, chunked like attention) form;
+    mathematically equivalent to the recurrence (xLSTM paper App. A), maps to
+    MXU matmuls on TPU.
+  * sLSTM — inherently sequential (recurrent h feeds the gates): lax.scan
+    over time.
+  * RG-LRU — linear recurrence h_t = a_t h_{t-1} + b_t via associative scan
+    (log-depth, parallel on TPU).
+
+Decode: O(1)-state recurrent step for all three — this is what makes the
+ssm/hybrid architectures run the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import NEG_INF, ApplyCtx
+from .params import P
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_spec(cfg: ModelConfig) -> Dict[str, P]:
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h  # cell width == d_model (projection factor 1)
+    return {
+        "wq": P((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": P((d, h, hd), ("embed", "heads", "head_dim")),
+        "wv": P((d, h, hd), ("embed", "heads", "head_dim")),
+        "wif": P((d, 2 * h), ("embed", None), scale=0.01),  # i,f gate pre-acts
+        "wog": P((d, h, hd), ("embed", "heads", "head_dim"), scale=0.01),
+        "wo": P((h, hd, d), ("heads", "head_dim", "embed")),
+        "bif": P((2 * h,), (None,), init="zeros"),
+    }
+
+
+def _mlstm_qkv(cfg, params, x):
+    b, t, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    q = jnp.einsum("btd,dhk->bhtk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bhtk", x, params["wk"]) * (hd**-0.5)
+    v = jnp.einsum("btd,dhk->bhtk", x, params["wv"])
+    gates = x @ params["wif"] + params["bif"]  # (B, T, 2H)
+    log_i = gates[..., :h].transpose(0, 2, 1).astype(jnp.float32)  # (B,H,T)
+    log_f = jax.nn.log_sigmoid(gates[..., h:]).transpose(0, 2, 1).astype(jnp.float32)
+    o = jax.nn.sigmoid(jnp.einsum("btd,dhk->bhtk", x, params["wog"]))
+    return q, k, v, log_i, log_f, o
+
+
+def _mlstm_parallel(cfg, params, x, ctx: ApplyCtx):
+    """Stabilized quadratic form, chunked over queries."""
+    b, t, d = x.shape
+    h = cfg.num_heads
+    q, k, v, log_i, log_f, o = _mlstm_qkv(cfg, params, x)
+    fcum = jnp.cumsum(log_f, axis=-1)  # (B,H,T) F_t = sum_{s<=t} log f_s
+
+    # decay matrix entries: D~[t,s] = F_t - F_s + log_i_s  (s <= t)
+    def chunk_out(q_c, fcum_c, tpos_c):
+        # q_c (B,H,qc,hd); fcum_c (B,H,qc); tpos_c (qc,)
+        from .layers import _seq_shard
+
+        q_c = _seq_shard(q_c, ctx, 2)
+        dmat = fcum_c[..., :, None] - fcum[..., None, :] + log_i[..., None, :]
+        causal = tpos_c[:, None] >= jnp.arange(t)[None, :]
+        dmat = jnp.where(causal[None, None], dmat, NEG_INF)
+        m = jnp.max(dmat, axis=-1, keepdims=True)  # (B,H,qc,1)
+        m = jnp.maximum(m, -1e30)
+        dec = jnp.exp(dmat - m)
+        scores = jnp.einsum(
+            "bhqk,bhsk->bhqs", q_c.astype(jnp.float32), k.astype(jnp.float32)
+        ) * dec
+        norm = jnp.maximum(jnp.abs(jnp.sum(scores, axis=-1, keepdims=True)), jnp.exp(-m))
+        hh = jnp.einsum("bhqs,bhsk->bhqk", scores / norm, v.astype(jnp.float32))
+        from .layers import _seq_shard
+
+        return _seq_shard(hh, ctx, 2)
+
+    chunk = min(ctx.q_chunk, t)
+    if t % chunk != 0:
+        chunk = t
+    n_chunks = t // chunk
+    if n_chunks == 1:
+        hh = chunk_out(q, fcum, jnp.arange(t))
+    else:
+        qs = q.reshape(b, h, n_chunks, chunk, -1)
+        fs = fcum.reshape(b, h, n_chunks, chunk)
+        ts = jnp.arange(t).reshape(n_chunks, chunk)
+        if ctx.unroll_chunks:
+            hh = jnp.concatenate(
+                [chunk_out(qs[:, :, i], fs[:, :, i], ts[i]) for i in range(n_chunks)],
+                axis=2,
+            )
+        else:
+            def body(_, inp):
+                qc, fc, tc = inp
+                return None, chunk_out(qc, fc, tc)
+
+            _, hh = jax.lax.scan(
+                body, None,
+                (jnp.moveaxis(qs, 2, 0), jnp.moveaxis(fs, 2, 0), ts),
+            )
+            hh = jnp.moveaxis(hh, 0, 2).reshape(b, h, t, -1)
+        hh = hh.reshape(b, h, t, -1)
+
+    hh = (o.astype(jnp.float32) * hh).astype(x.dtype)  # (B,H,T,hd)
+    y = jnp.einsum("bhtk,hkd->btd", hh, params["wo"])
+    return y, (q, k, v, log_i, log_f, fcum)
+
+
+def mlstm_final_state(cfg, k, v, log_i, fcum):
+    """Final (C, n, m) after a parallel pass — fills the decode cache."""
+    f_total = fcum[..., -1:]  # (B,H,1)
+    w_log = f_total - fcum + log_i  # (B,H,T): weight of step s in C_T
+    m = jnp.max(w_log, axis=-1)  # (B,H)
+    w = jnp.exp(w_log - m[..., None])
+    c = jnp.einsum("bht,bhtk,bhtl->bhkl", w, v.astype(jnp.float32), k.astype(jnp.float32))
+    n = jnp.einsum("bht,bhtk->bhk", w, k.astype(jnp.float32))
+    return {"C": c, "n": n, "m": m}
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Dict[str, Array]:
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_block(
+    cfg: ModelConfig,
+    params: Dict[str, Array],
+    x: Array,
+    *,
+    ctx: ApplyCtx,
+    cache: Optional[Dict[str, Array]] = None,
+) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    if ctx.mode == "train":
+        y, _ = _mlstm_parallel(cfg, params, x, ctx)
+        return y, None
+    if ctx.mode == "prefill":
+        y, (q, k, v, log_i, log_f, fcum) = _mlstm_parallel(cfg, params, x, ctx)
+        return y, mlstm_final_state(cfg, k, v, log_i, fcum)
+    # decode: one stabilized recurrent step
+    assert cache is not None
+    q, k, v, log_i, log_f, o = _mlstm_qkv(cfg, params, x)  # T == 1
+    q1, k1, v1 = q[:, :, 0], k[:, :, 0], v[:, :, 0]  # (B,H,hd)
+    li, lf = log_i[..., 0], log_f[..., 0]  # (B,H)
+    m_prev = cache["m"]
+    m_new = jnp.maximum(lf + m_prev, li)
+    i_p = jnp.exp(li - m_new)[..., None]
+    f_p = jnp.exp(lf + m_prev - m_new)[..., None]
+    c_new = f_p[..., None] * cache["C"] + i_p[..., None] * (
+        v1.astype(jnp.float32)[..., :, None] * k1.astype(jnp.float32)[..., None, :]
+    )
+    n_new = f_p * cache["n"] + i_p * k1.astype(jnp.float32)
+    num = jnp.einsum("bhkl,bhl->bhk", c_new, q1.astype(jnp.float32))
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q1.astype(jnp.float32)))[..., None],
+        jnp.exp(-m_new)[..., None],
+    )
+    hh = (o[:, :, 0].astype(jnp.float32) * num / den).astype(x.dtype)  # (B,H,hd)
+    y = jnp.einsum("bhk,hkd->bd", hh, params["wo"])[:, None, :]
+    return y, {"C": c_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_spec(cfg: ModelConfig) -> Dict[str, P]:
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    return {
+        "wx": P((d, 4, h, hd), ("embed", None, "heads", "head_dim")),
+        "r": P((4, h, hd, hd), (None, "heads", "head_dim", None), scale=0.01),
+        "b": P((4, h, hd), (None, "heads", "head_dim"), init="zeros"),
+        "wo": P((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Dict[str, Array]:
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    z = lambda: jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, h, hd), -1e30, jnp.float32)}
+
+
+def _slstm_step(params, state, xt):
+    """One sLSTM step.  xt: (B, 4, H, hd) pre-activations from the input."""
+    c, n, h_prev, m_prev = state["c"], state["n"], state["h"], state["m"]
+    # recurrent contribution: block-diagonal per head
+    rec = jnp.einsum("bhk,ghkl->bghl", h_prev, params["r"])  # (B,4,H,hd)
+    pre = xt.astype(jnp.float32) + rec + params["b"].astype(jnp.float32)
+    z = jnp.tanh(pre[:, 0])
+    log_i = pre[:, 1]
+    log_f = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + m_prev - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = jnp.maximum(f_p * n + i_p, 1e-6)
+    h_new = o * (c_new / n_new)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_block(
+    cfg: ModelConfig,
+    params: Dict[str, Array],
+    x: Array,
+    *,
+    ctx: ApplyCtx,
+    cache: Optional[Dict[str, Array]] = None,
+) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    b, t, d = x.shape
+    pre = jnp.einsum("btd,dghk->btghk", x, params["wx"])  # (B,T,4,H,hd)
+
+    if ctx.mode == "decode":
+        assert cache is not None
+        state = _slstm_step(params, cache, pre[:, 0])
+        hh = state["h"].astype(x.dtype)
+        y = jnp.einsum("bhk,hkd->bd", hh, params["wo"])[:, None, :]
+        return y, state
+
+    state = init_slstm_cache(cfg, b) if cache is None else cache
+
+    def body(st, xt):
+        st2 = _slstm_step(params, st, xt)
+        return st2, st2["h"]
+
+    final, hs = jax.lax.scan(body, state, jnp.moveaxis(pre, 1, 0))
+    hh = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B,T,H,hd)
+    y = jnp.einsum("bthk,hkd->btd", hh, params["wo"])
+    new_cache = final if ctx.mode == "prefill" else None
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+_CONV_W = 4
+
+
+def rglru_spec(cfg: ModelConfig) -> Dict[str, P]:
+    d = cfg.d_model
+    r = d  # lru width == d_model for recurrentgemma
+    return {
+        "w_in": P((d, r), ("embed", "rnn")),
+        "w_gate": P((d, r), ("embed", "rnn")),
+        "conv_w": P((_CONV_W, r), (None, "rnn"), scale=0.1),
+        "conv_b": P((r,), ("rnn",), init="zeros"),
+        "w_a": P((r, r), ("rnn", None), scale=0.01),
+        "w_x": P((r, r), ("rnn", None), scale=0.01),
+        "lam": P((r,), ("rnn",), init="ones"),  # softplus(lam) -> decay
+        "w_out": P((r, d), ("rnn", "embed")),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> Dict[str, Array]:
+    r = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, r), jnp.float32),
+    }
+
+
+def _rglru_gates(params, u: Array):
+    """a_t (decay) and b_t (input) of the linear recurrence, from u (B,T,R)."""
+    r_gate = jax.nn.sigmoid(u @ params["w_a"])  # recurrence gate
+    i_gate = jax.nn.sigmoid(u @ params["w_x"])  # input gate
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"]) * r_gate.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i_gate.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, b
+
+
+def _causal_conv(params, u: Array, state: Optional[Array]):
+    """Depthwise causal conv, width 4.  u: (B,T,R); state: (B,3,R) history."""
+    b, t, r = u.shape
+    if state is None:
+        hist = jnp.zeros((b, _CONV_W - 1, r), u.dtype)
+    else:
+        hist = state.astype(u.dtype)
+    ext = jnp.concatenate([hist, u], axis=1)  # (B, T+3, R)
+    out = jnp.zeros_like(u)
+    for w in range(_CONV_W):
+        out = out + ext[:, w : w + t] * params["conv_w"][_CONV_W - 1 - w]
+    out = out + params["conv_b"]
+    new_state = ext[:, -(_CONV_W - 1):].astype(jnp.float32)
+    return out, new_state
+
+
+def rglru_block(
+    cfg: ModelConfig,
+    params: Dict[str, Array],
+    x: Array,
+    *,
+    ctx: ApplyCtx,
+    cache: Optional[Dict[str, Array]] = None,
+) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    b, t, d = x.shape
+    u = x @ params["w_in"]  # (B,T,R)
+    gate = jax.nn.gelu(x @ params["w_gate"])
+
+    conv_state = None if cache is None else cache["conv"]
+    u, new_conv = _causal_conv(params, u, conv_state)
+    a, bb = _rglru_gates(params, u)  # (B,T,R) f32
+
+    if ctx.mode == "decode":
+        assert cache is not None
+        h_new = a[:, 0] * cache["h"] + bb[:, 0]
+        y_rnn = h_new[:, None, :]
+        new_cache = {"h": h_new, "conv": new_conv}
+    else:
+        h0 = None if cache is None else cache["h"]
+        if h0 is not None:
+            # fold carried state into the first step: h_1 = a_1 h_0 + b_1
+            bb = bb.at[:, 0].add(a[:, 0] * h0)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        a_s, h_s = jax.lax.associative_scan(combine, (a, bb), axis=1)
+        y_rnn = h_s
+        new_cache = (
+            {"h": h_s[:, -1], "conv": new_conv} if ctx.mode == "prefill" else None
+        )
+
+    y = (gate.astype(jnp.float32) * y_rnn).astype(x.dtype) @ params["w_out"]
+    return y, new_cache

@@ -1,0 +1,476 @@
+"""Unified LM assembly: embed -> layer-pattern cycles (scan) -> norm -> head.
+
+One code path serves every assigned family:
+  dense / moe        — homogeneous attention+FFN blocks
+  vlm                — same, with precomputed patch embeddings prepended (stub
+                       frontend per the assignment)
+  ssm (xlstm)        — mLSTM/sLSTM pattern, no FFN
+  hybrid (rglru)     — RG-LRU + local-attention pattern
+  encdec (whisper)   — encoder stack (full attn) + decoder with cross-attn
+                       (see encdec.py for the encoder driver)
+
+Layers are stored *stacked per pattern position* and executed with
+``lax.scan`` over cycles (HLO size O(pattern), not O(depth) — essential for
+512-device compiles); remainder layers (depth % pattern) are unrolled.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import moe as moe_lib
+from . import recurrent as rec
+from .layers import (
+    ApplyCtx,
+    attention,
+    attention_spec,
+    constrain_batch,
+    init_attention_cache,
+    mlp,
+    mlp_spec,
+    rmsnorm,
+    rmsnorm_spec,
+)
+from .params import P, stack_spec
+
+Array = jax.Array
+
+ATTN_KINDS = ("dense", "moe", "localattn", "enc", "xdec")
+
+
+# ---------------------------------------------------------------------------
+# per-block spec / apply / cache
+# ---------------------------------------------------------------------------
+
+
+def block_spec(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    if kind in ("dense", "moe", "localattn", "enc", "xdec"):
+        spec = {"ln1": rmsnorm_spec(d), "attn": attention_spec(cfg)}
+        if kind == "xdec":
+            spec["lnx"] = rmsnorm_spec(d)
+            spec["xattn"] = attention_spec(cfg, cross=True)
+        if kind == "moe":
+            spec["ln2"] = rmsnorm_spec(d)
+            spec["ffn"] = moe_lib.moe_spec(cfg)
+        elif cfg.d_ff > 0:
+            spec["ln2"] = rmsnorm_spec(d)
+            spec["ffn"] = mlp_spec(cfg)
+        return spec
+    if kind == "mlstm":
+        return {"ln1": rmsnorm_spec(d), "mix": rec.mlstm_spec(cfg)}
+    if kind == "slstm":
+        return {"ln1": rmsnorm_spec(d), "mix": rec.slstm_spec(cfg)}
+    if kind == "rglru":
+        spec = {"ln1": rmsnorm_spec(d), "mix": rec.rglru_spec(cfg)}
+        if cfg.d_ff > 0:
+            spec["ln2"] = rmsnorm_spec(d)
+            spec["ffn"] = mlp_spec(cfg)
+        return spec
+    raise ValueError(kind)
+
+
+def init_block_cache(
+    cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype
+) -> Optional[Dict[str, Any]]:
+    if kind in ("dense", "moe", "enc"):
+        return init_attention_cache(cfg, batch, max_len, dtype)
+    if kind == "localattn":
+        return init_attention_cache(cfg, batch, max_len, dtype, window=cfg.local_window)
+    if kind == "xdec":
+        return {
+            "self": init_attention_cache(cfg, batch, max_len, dtype),
+            "cross": init_attention_cache(cfg, batch, cfg.encoder_seq, dtype),
+        }
+    if kind == "mlstm":
+        return rec.init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return rec.init_slstm_cache(cfg, batch)
+    if kind == "rglru":
+        cache = rec.init_rglru_cache(cfg, batch)
+        return cache
+    raise ValueError(kind)
+
+
+def block_apply(
+    cfg: ModelConfig,
+    kind: str,
+    params: Dict[str, Any],
+    x: Array,
+    *,
+    ctx: ApplyCtx,
+    positions: Array,
+    length: Optional[Array],
+    cache: Optional[Dict[str, Any]],
+    enc_out: Optional[Array] = None,
+) -> Tuple[Array, Optional[Dict[str, Any]], Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+
+    if kind in ("dense", "moe", "localattn", "enc", "xdec"):
+        window = cfg.local_window if kind == "localattn" else 0
+        causal = kind != "enc"
+        h = rmsnorm(params["ln1"], x, eps)
+        self_cache = cache["self"] if kind == "xdec" and cache is not None else cache
+        y, new_self = attention(
+            cfg, params["attn"], h, ctx=ctx, causal=causal, window=window,
+            positions=positions, length=length, cache=self_cache,
+        )
+        y = jax.ad_checkpoint.checkpoint_name(y, "attn_out")
+        x = x + y
+        new_cache = new_self
+        if kind == "xdec":
+            hx = rmsnorm(params["lnx"], x, eps)
+            cross_cache = cache["cross"] if cache is not None else None
+            # decode reads the prefilled cross cache; prefill builds it
+            y, new_cross = attention(
+                cfg, params["xattn"], hx, ctx=ctx, causal=False,
+                positions=positions, length=length, cache=cross_cache,
+                kv_x=enc_out if ctx.mode != "decode" else None,
+                use_rope=False, is_cross=True,
+            )
+            x = x + y
+            new_cache = {"self": new_self, "cross": new_cross}
+        if "ffn" in params:
+            h = rmsnorm(params["ln2"], x, eps)
+            if kind == "moe":
+                y, probs = moe_lib.moe_ffn(cfg, params["ffn"], h, ctx)
+                aux = moe_lib.load_balance_loss(cfg, probs.reshape(-1, cfg.num_experts))
+            else:
+                y = mlp(cfg, params["ffn"], h, ctx)
+            x = x + jax.ad_checkpoint.checkpoint_name(y, "mlp_out")
+        return x, new_cache, aux
+
+    if kind in ("mlstm", "slstm", "rglru"):
+        h = rmsnorm(params["ln1"], x, eps)
+        fn = {"mlstm": rec.mlstm_block, "slstm": rec.slstm_block, "rglru": rec.rglru_block}[kind]
+        y, new_cache = fn(cfg, params["mix"], h, ctx=ctx, cache=cache)
+        x = x + y
+        if "ffn" in params:
+            h = rmsnorm(params["ln2"], x, eps)
+            x = x + jax.ad_checkpoint.checkpoint_name(
+                mlp(cfg, params["ffn"], h, ctx), "mlp_out"
+            )
+        return x, new_cache, aux
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# full-model spec
+# ---------------------------------------------------------------------------
+
+
+def _cycles_and_rest(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    pattern = cfg.pattern
+    n_cycles = cfg.num_layers // len(pattern)
+    rest = pattern[: cfg.num_layers % len(pattern)]
+    return n_cycles, rest
+
+
+def lm_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    n_cycles, rest = _cycles_and_rest(cfg)
+    spec: Dict[str, Any] = {
+        "embed": P((v, d), ("vocab", "embed"), scale=1.0 / (d**0.5)),
+        "final_norm": rmsnorm_spec(d),
+        "cycles": [
+            stack_spec(block_spec(cfg, kind), n_cycles) for kind in cfg.pattern
+        ],
+        "rest": [block_spec(cfg, kind) for kind in rest],
+    }
+    if not cfg.tie_embeddings:
+        spec["head"] = P((d, v), ("embed", "vocab"), scale=0.02)
+    if cfg.vision_patches:
+        spec["vision_proj"] = P((d, d), ("embed", None))
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# full-model apply
+# ---------------------------------------------------------------------------
+
+
+def _embed(
+    cfg: ModelConfig, params, tokens: Array, vision: Optional[Array],
+    ctx: Optional[ApplyCtx] = None,
+) -> Array:
+    x = params["embed"][tokens] * jnp.asarray(
+        cfg.d_model**0.5, params["embed"].dtype
+    )
+    if vision is not None:
+        vproj = vision.astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([vproj, x], axis=1)
+    if ctx is not None:
+        x = constrain_batch(x, ctx)
+    return x
+
+
+def _head(cfg: ModelConfig, params, x: Array, ctx: Optional[ApplyCtx] = None) -> Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", x, params["embed"])
+    else:
+        logits = jnp.einsum("btd,dv->btv", x, params["head"])
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    if ctx is not None and ctx.mesh_info is not None:
+        mi = ctx.mesh_info
+        v_ax = (
+            mi.model_axis
+            if mi.model_axis and cfg.vocab_size % mi.mesh.shape[mi.model_axis] == 0
+            else None
+        )
+        logits = constrain_batch(logits, ctx, tail=[None] * (logits.ndim - 2) + [v_ax])
+    return logits
+
+
+def apply_cycle(
+    cfg: ModelConfig,
+    cycle_params,
+    x: Array,
+    *,
+    ctx: ApplyCtx,
+    positions: Array,
+    length: Optional[Array] = None,
+    caches=None,
+    enc_out: Optional[Array] = None,
+):
+    """One pattern cycle (the scan body / the dry-run's per-layer cost unit).
+
+    Returns (x, new_caches, aux); when caches is None, new_caches are scalar
+    placeholders so the scan carries a consistent pytree.
+    """
+    use_cache = caches is not None
+    mi = ctx.mesh_info
+    if (
+        ctx.seq_parallel
+        and mi is not None
+        and mi.model_axis is not None
+        and x.shape[1] % mi.mesh.shape[mi.model_axis] == 0
+    ):
+        # sequence-parallel residual stream (see ApplyCtx.seq_parallel)
+        x = constrain_batch(x, ctx, tail=[mi.model_axis, None])
+    else:
+        x = constrain_batch(x, ctx)
+    new_caches: List[Any] = []
+    aux = jnp.zeros((), jnp.float32)
+    for j, kind in enumerate(cfg.pattern):
+        x, nc, a = block_apply(
+            cfg, kind, cycle_params[j], x, ctx=ctx, positions=positions,
+            length=length, cache=caches[j] if use_cache else None,
+            enc_out=enc_out,
+        )
+        new_caches.append(nc if use_cache else jnp.zeros((), jnp.float32))
+        aux = aux + a
+    return x, new_caches, aux
+
+
+def _run_stack(
+    cfg: ModelConfig,
+    params,
+    x: Array,
+    *,
+    ctx: ApplyCtx,
+    positions: Array,
+    length: Optional[Array],
+    cache: Optional[Dict[str, Any]],
+    enc_out: Optional[Array] = None,
+) -> Tuple[Array, Optional[Dict[str, Any]], Array]:
+    """The layer loop: scan over cycles + unrolled remainder."""
+    n_cycles, rest = _cycles_and_rest(cfg)
+    pattern = cfg.pattern
+    use_cache = cache is not None
+
+    def cycle_fn(x, cycle_params, cycle_caches):
+        return apply_cycle(
+            cfg, cycle_params, x, ctx=ctx, positions=positions, length=length,
+            caches=cycle_caches if use_cache else None, enc_out=enc_out,
+        )
+
+    body = cycle_fn
+    if ctx.mode == "train" and ctx.remat == "full":
+        body = jax.checkpoint(cycle_fn, prevent_cse=False)
+    elif ctx.mode == "train" and ctx.remat == "dots":
+        body = jax.checkpoint(
+            cycle_fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    elif ctx.mode == "train" and ctx.remat == "outs":
+        # save exactly the post-collective sublayer outputs: backward never
+        # re-runs a tensor-parallel all-reduce, at 2 x (B,T,D) saved per layer
+        body = jax.checkpoint(
+            cycle_fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out", "mlp_out", "moe_recv", "moe_back"
+            ),
+        )
+
+    if n_cycles > 0:
+        def scan_body(carry, xs):
+            x, aux_acc = carry
+            cyc_params, cyc_caches = xs
+            x, new_caches, aux = body(x, cyc_params, cyc_caches)
+            return (x, aux_acc + aux), new_caches
+
+        caches_in = (
+            cache["cycles"]
+            if use_cache
+            else [jnp.zeros((n_cycles,), jnp.float32) for _ in pattern]
+        )
+        (x, aux_total), new_cycle_caches = jax.lax.scan(
+            scan_body,
+            (x, jnp.zeros((), jnp.float32)),
+            (params["cycles"], caches_in),
+        )
+    else:
+        aux_total = jnp.zeros((), jnp.float32)
+        new_cycle_caches = []
+
+    new_rest = []
+    for j, kind in enumerate(rest):
+        x, nc, a = block_apply(
+            cfg, kind, params["rest"][j], x, ctx=ctx, positions=positions,
+            length=length, cache=cache["rest"][j] if use_cache else None,
+            enc_out=enc_out,
+        )
+        new_rest.append(nc)
+        aux_total = aux_total + a
+
+    new_cache = None
+    if use_cache:
+        new_cache = dict(cache)
+        new_cache["cycles"] = new_cycle_caches
+        new_cache["rest"] = new_rest
+    return x, new_cache, aux_total
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> Dict[str, Any]:
+    """Decode cache for the whole stack + position counter."""
+    n_cycles, rest = _cycles_and_rest(cfg)
+
+    def stacked(kind):
+        one = init_block_cache(cfg, kind, batch, max_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l[None], (n_cycles, *l.shape)).copy(), one
+        )
+
+    return {
+        "length": jnp.zeros((), jnp.int32),
+        "cycles": [stacked(kind) for kind in cfg.pattern],
+        "rest": [init_block_cache(cfg, kind, batch, max_len, dtype) for kind in rest],
+    }
+
+
+def _block_cache_axes(cfg: ModelConfig, kind: str):
+    """Logical axes tree parallel to ``init_block_cache`` (sharding rules)."""
+    kv = {"k": ("batch", "seq", "kv_heads", "head_dim"),
+          "v": ("batch", "seq", "kv_heads", "head_dim")}
+    if kind in ("dense", "moe", "enc", "localattn"):
+        return dict(kv)
+    if kind == "xdec":
+        return {"self": dict(kv), "cross": dict(kv)}
+    if kind == "mlstm":
+        return {
+            "C": ("batch", "heads", "head_dim", None),
+            "n": ("batch", "heads", "head_dim"),
+            "m": ("batch", "heads"),
+        }
+    if kind == "slstm":
+        ax = ("batch", "heads", "head_dim")
+        return {"c": ax, "n": ax, "h": ax, "m": ax}
+    if kind == "rglru":
+        return {"h": ("batch", "rnn"), "conv": ("batch", None, "rnn")}
+    raise ValueError(kind)
+
+
+def cache_axes_tree(cfg: ModelConfig):
+    """Axes tree with the same structure as ``init_cache`` output."""
+    n_cycles, rest = _cycles_and_rest(cfg)
+    is_axes = lambda x: isinstance(x, tuple)
+
+    def stacked(kind):
+        one = _block_cache_axes(cfg, kind)
+        return jax.tree_util.tree_map(
+            lambda ax: ("layers", *ax), one, is_leaf=is_axes
+        )
+
+    return {
+        "length": (),
+        "cycles": [stacked(kind) for kind in cfg.pattern],
+        "rest": [_block_cache_axes(cfg, kind) for kind in rest],
+    }
+
+
+def forward_train(
+    cfg: ModelConfig,
+    params,
+    tokens: Array,  # (B, T)
+    *,
+    ctx: ApplyCtx,
+    vision: Optional[Array] = None,
+    enc_out: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Full-sequence forward.  Returns (logits (B,T,V), aux_loss)."""
+    x = _embed(cfg, params, tokens, vision, ctx)
+    positions = jnp.arange(x.shape[1])
+    x, _, aux = _run_stack(
+        cfg, params, x, ctx=ctx, positions=positions, length=None,
+        cache=None, enc_out=enc_out,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _head(cfg, params, x, ctx), aux
+
+
+def prefill(
+    cfg: ModelConfig,
+    params,
+    tokens: Array,
+    cache: Dict[str, Any],
+    *,
+    ctx: ApplyCtx,
+    vision: Optional[Array] = None,
+    enc_out: Optional[Array] = None,
+) -> Tuple[Array, Dict[str, Any]]:
+    """Prefill the cache; returns (last-position logits (B,V), cache)."""
+    x = _embed(cfg, params, tokens, vision, ctx)
+    t = x.shape[1]
+    positions = jnp.arange(t)
+    x, new_cache, _ = _run_stack(
+        cfg, params, x, ctx=ctx, positions=positions, length=None,
+        cache=cache, enc_out=enc_out,
+    )
+    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = _head(cfg, params, x, ctx)[:, 0]
+    new_cache["length"] = jnp.asarray(t, jnp.int32)
+    return logits, new_cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params,
+    token: Array,  # (B, 1)
+    cache: Dict[str, Any],
+    *,
+    ctx: ApplyCtx,
+) -> Tuple[Array, Dict[str, Any]]:
+    """One decode step.  Returns (logits (B,V), cache)."""
+    length = cache["length"]
+    x = _embed(cfg, params, token, None, ctx)
+    positions = jnp.full((1,), length, jnp.int32)
+    x, new_cache, _ = _run_stack(
+        cfg, params, x, ctx=ctx, positions=positions, length=length,
+        cache=cache, enc_out=None,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(cfg, params, x, ctx)[:, 0]
+    new_cache["length"] = length + 1
+    return logits, new_cache

@@ -1,0 +1,110 @@
+"""AdamW with decoupled weight decay, global-norm clipping, LR schedules.
+
+Self-contained (no optax).  Optimizer state is a pytree parallel to params
+(m, v in f32) — it inherits the params' FSDP sharding, making the update
+collective-free and purely memory-bound (the roofline's optimizer unit).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: Array
+
+
+def init(params: Any, dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def abstract_state(abstract_params: Any, dtype=jnp.float32) -> AdamWState:
+    mk = lambda p: jax.ShapeDtypeStruct(p.shape, dtype)
+    return AdamWState(
+        m=jax.tree_util.tree_map(mk, abstract_params),
+        v=jax.tree_util.tree_map(mk, abstract_params),
+        count=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply(
+    params: Any,
+    grads: Any,
+    state: AdamWState,
+    lr: Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Tuple[Any, AdamWState, Array]:
+    """One AdamW update.  Returns (params, state, grad_norm)."""
+    if grad_clip > 0:
+        grads, norm = clip_by_global_norm(grads, grad_clip)
+    else:
+        norm = global_norm(grads)
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m.astype(jnp.float32) + (1.0 - b1) * g32
+        v2 = b2 * v.astype(jnp.float32) + (1.0 - b2) * g32 * g32
+        mh = m2 / c1
+        vh = v2 / c2
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * step
+        # moments stored in state dtype (bf16 for 100B+ models — the
+        # memory-fitting production trade; see EXPERIMENTS.md)
+        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(new_m, new_v, count), norm
+
+
+def cosine_schedule(
+    base_lr: float, warmup_steps: int, total_steps: int
+) -> Callable[[Array], Array]:
+    def lr(step: Array) -> Array:
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip(
+            (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup_steps, warm, cos)
+
+    return lr

@@ -1,0 +1,60 @@
+"""Serving steps: prefill (build the cache) and decode (one token vs cache).
+
+These are the functions the decode_32k / long_500k / prefill_32k cells lower.
+Sampling is greedy/temperature from the last-position logits; the server
+driver (examples/serve_partitioned.py) batches requests and uses the paper's
+partitioner to split them across heterogeneous replicas.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model_zoo
+from repro.models.layers import ApplyCtx
+
+Array = jax.Array
+
+
+def make_prefill_step(cfg: ModelConfig, *, ctx: ApplyCtx) -> Callable:
+    def prefill_fn(params, batch: Dict[str, Array], cache):
+        logits, cache = model_zoo.prefill(cfg, params, batch, cache, ctx=ctx)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return token, cache
+
+    return prefill_fn
+
+
+def make_decode_step(cfg: ModelConfig, *, ctx: ApplyCtx) -> Callable:
+    def decode_fn(params, token: Array, cache):
+        logits, cache = model_zoo.decode_step(cfg, params, token, cache, ctx=ctx)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, cache
+
+    return decode_fn
+
+
+def generate(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, Array],
+    max_len: int,
+    steps: int,
+    *,
+    ctx_prefill: ApplyCtx,
+    ctx_decode: ApplyCtx,
+) -> Array:
+    """Greedy generation loop (CPU examples; the cells lower single steps)."""
+    b = batch["tokens"].shape[0]
+    cache = model_zoo.init_cache(cfg, b, max_len, jnp.float32)
+    token, cache = make_prefill_step(cfg, ctx=ctx_prefill)(params, batch, cache)
+    outs = [token]
+
+    decode_fn = jax.jit(make_decode_step(cfg, ctx=ctx_decode))
+    for _ in range(steps - 1):
+        token, cache = decode_fn(params, token, cache)
+        outs.append(token)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,199 @@
+"""Training step: loss, microbatched gradient accumulation, optimizer fusion.
+
+The step is built in composable units so the dry-run can cost them
+separately (XLA's HLO cost analysis counts while-loop bodies once):
+
+  microbatch fwd+bwd  --scan over M microbatches-->  grads
+  grads  --[optional compression hook]-->  AdamW update (donated, in-place)
+
+Heterogeneous work assignment (the paper's partitioner) is realized as
+*weighted* gradient accumulation: each worker runs its own number of
+microbatches and gradients are combined with token-count weights — shapes
+stay static (no recompilation when the split changes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import model_zoo
+from repro.models.layers import ApplyCtx
+from repro.optim import adamw
+
+Array = jax.Array
+
+Z_LOSS_WEIGHT = 1e-4
+
+
+def cross_entropy(logits: Array, labels: Array, vocab: int) -> Tuple[Array, Array]:
+    """Mean token cross-entropy + z-loss.  labels < 0 are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    xent = jnp.sum(nll) / denom
+    z = jnp.sum(jnp.square(logz) * mask) / denom
+    return xent, z
+
+
+def loss_fn(
+    cfg: ModelConfig, params, batch: Dict[str, Array], ctx: ApplyCtx
+) -> Tuple[Array, Dict[str, Array]]:
+    logits, aux = model_zoo.forward_train(cfg, params, batch, ctx=ctx)
+    labels = batch["labels"]
+    if cfg.vision_patches and logits.shape[1] != labels.shape[1]:
+        logits = logits[:, -labels.shape[1]:]  # loss on text positions only
+    xent, z = cross_entropy(logits, labels, cfg.vocab_size)
+    loss = xent + Z_LOSS_WEIGHT * z + cfg.router_aux_weight * aux
+    return loss, {"xent": xent, "aux": aux, "z": z}
+
+
+def microbatch_value_and_grad(cfg: ModelConfig, ctx: ApplyCtx) -> Callable:
+    """(params, microbatch) -> ((loss, metrics), grads) — the dry-run's
+    per-microbatch cost unit."""
+
+    def f(params, mb):
+        return loss_fn(cfg, params, mb, ctx)
+
+    return jax.value_and_grad(f, has_aux=True)
+
+
+def split_microbatches(batch: Dict[str, Array], m: int) -> Dict[str, Array]:
+    """Host-side microbatch split: (B, ...) -> (M, B/M, ...).
+
+    IMPORTANT for SPMD: the global batch must be laid out so each (B/M, ...)
+    slice spans all data-parallel shards (the data pipeline emits it this
+    way).  ``accumulate_grads`` expects batches already in (M, B/M, ...) form
+    with the *second* dim sharded over the data axes — scanning over a
+    sharded leading dim would force a re-distribution every microbatch.
+    """
+
+    def r(x):
+        b = x.shape[0]
+        assert b % m == 0, f"batch {b} not divisible into {m} microbatches"
+        return x.reshape(m, b // m, *x.shape[1:])
+
+    return jax.tree_util.tree_map(r, batch)
+
+
+def accumulate_grads(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, Array],
+    *,
+    ctx: ApplyCtx,
+    num_microbatches: int,
+    weights: Optional[Array] = None,
+    grad_dtype=jnp.float32,
+) -> Tuple[Any, Dict[str, Array]]:
+    """Scan-accumulated gradients over microbatches.
+
+    weights: optional (M,) per-microbatch weights (the Bayesian partitioner's
+    heterogeneous split — weight 0 skips a microbatch's contribution, which is
+    how per-worker work counts differ without shape changes).
+
+    ``batch`` leaves must already be microbatched: (M, B/M, ...) with dim 1
+    sharded over the data axes (see ``split_microbatches``).
+    """
+    vg = microbatch_value_and_grad(cfg, ctx)
+    mbs = batch
+    if weights is None:
+        weights = jnp.ones((num_microbatches,), jnp.float32)
+    wsum = jnp.maximum(jnp.sum(weights), 1e-9)
+
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, grad_dtype), params
+    )
+
+    def body(carry, xs):
+        grads_acc, loss_acc = carry
+        mb, w = xs
+        (loss, metrics), grads = vg(params, mb)
+        grads_acc = jax.tree_util.tree_map(
+            lambda a, g: a + w.astype(grad_dtype) * g.astype(grad_dtype),
+            grads_acc, grads,
+        )
+        return (grads_acc, loss_acc + w * loss), metrics
+
+    (grads, loss_sum), metrics = jax.lax.scan(
+        body, (zeros, jnp.zeros(())), (mbs, weights)
+    )
+    grads = jax.tree_util.tree_map(lambda g: g / wsum, grads)
+    metrics = jax.tree_util.tree_map(lambda x: jnp.mean(x), metrics)
+    metrics["loss"] = loss_sum / wsum
+    return grads, metrics
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    run: RunConfig,
+    *,
+    ctx: ApplyCtx,
+    num_microbatches: int,
+    compression: Optional[Callable] = None,
+) -> Callable:
+    """Full train step: accum -> (compress w/ error feedback) -> clip -> AdamW.
+
+    Signature without compression:
+        (params, opt_state, batch, step[, mb_weights]) ->
+        (params, opt_state, metrics)
+    With compression (fn: (grads, ef) -> (grads, ef)), an ``ef`` pytree rides
+    through the step:
+        (params, opt_state, batch, step, mb_weights, ef) ->
+        (params, opt_state, metrics, ef)
+    """
+    schedule = adamw.cosine_schedule(run.learning_rate, run.warmup_steps, run.total_steps)
+    grad_dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[run.grad_dtype]
+
+    def _finish(params, opt_state, grads, step, metrics):
+        lr = schedule(step)
+        params, opt_state, gnorm = adamw.apply(
+            params, grads, opt_state, lr,
+            weight_decay=run.weight_decay, grad_clip=run.grad_clip,
+        )
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    if compression is None:
+        def step_fn(params, opt_state, batch, step, mb_weights=None):
+            grads, metrics = accumulate_grads(
+                cfg, params, batch, ctx=ctx,
+                num_microbatches=num_microbatches, weights=mb_weights,
+                grad_dtype=grad_dt,
+            )
+            return _finish(params, opt_state, grads, step, metrics)
+
+        return step_fn
+
+    def step_fn_c(params, opt_state, batch, step, mb_weights, ef):
+        grads, metrics = accumulate_grads(
+            cfg, params, batch, ctx=ctx,
+            num_microbatches=num_microbatches, weights=mb_weights,
+            grad_dtype=grad_dt,
+        )
+        grads, ef = compression(grads, ef)
+        params, opt_state, metrics = _finish(params, opt_state, grads, step, metrics)
+        return params, opt_state, metrics, ef
+
+    return step_fn_c
+
+
+def make_optimizer_unit(cfg: ModelConfig, run: RunConfig) -> Callable:
+    """Optimizer-only unit for dry-run cost accounting."""
+
+    def opt_fn(params, opt_state, grads):
+        params, opt_state, gnorm = adamw.apply(
+            params, grads, opt_state, jnp.asarray(run.learning_rate, jnp.float32),
+            weight_decay=run.weight_decay, grad_clip=run.grad_clip,
+        )
+        return params, opt_state, gnorm
+
+    return opt_fn

@@ -1,0 +1,210 @@
+"""Production training loop with the paper's Bayesian partitioner in charge
+of heterogeneous work assignment, plus checkpoint/restart and fault handling.
+
+Flow per step:
+  1. data iterator -> (M, B/M, seq) microbatched global batch
+  2. jitted train_step with per-microbatch weights (the current split)
+  3. telemetry: per-worker step times (measured; simulated on CPU via
+     ``SimulatedCluster``) -> FaultToleranceMonitor
+  4. every ``partitioner_refit_every`` steps: Gibbs-update posteriors, emit a
+     new microbatch split (quantized efficient-frontier fractions)
+  5. failures -> evict worker, re-split, continue (elastic); checkpoints are
+     atomic and restart-resumable (params, optimizer, data cursor, RNG)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.partitioner import (
+    HeterogeneityAwarePartitioner,
+    WorkerTelemetry,
+)
+from repro.data.pipeline import DataIterator
+from repro.distributed.compression import make_compressor
+from repro.distributed.fault_tolerance import FaultToleranceMonitor
+from repro.distributed.simulated_cluster import SimulatedCluster
+from repro.models import model_zoo
+from repro.models.layers import ApplyCtx, MeshInfo
+from repro.optim import adamw
+from repro.train import train_step as ts
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps: int
+    losses: List[float]
+    splits: List[np.ndarray]
+    makespans: List[float]
+    events: List[Dict]
+
+
+class Trainer:
+    def __init__(
+        self,
+        run: RunConfig,
+        *,
+        cluster: Optional[SimulatedCluster] = None,
+        num_microbatches: Optional[int] = None,
+        mesh_info: Optional[MeshInfo] = None,
+    ):
+        self.run = run
+        self.cfg = run.model
+        self.cluster = cluster
+        self.mesh_info = mesh_info
+        self.m = num_microbatches or max(run.shape.global_batch // 8, 1)
+
+        key = jax.random.PRNGKey(run.seed)
+        self.params = model_zoo.init_model_params(key, self.cfg)
+        self.opt_state = adamw.init(self.params)
+        self.step = 0
+
+        self.ctx = ApplyCtx(mode="train", mesh_info=mesh_info, remat=run.remat)
+        compression = None
+        self._ef = None
+        if run.grad_compression != "none":
+            compression, init_ef = make_compressor(run.grad_compression, None)
+            self._ef = init_ef(self.params)
+
+        self._step_fn = jax.jit(
+            ts.make_train_step(
+                self.cfg, run, ctx=self.ctx,
+                num_microbatches=self.m, compression=compression,
+            )
+        )
+
+        self.data = DataIterator(
+            vocab_size=self.cfg.vocab_size,
+            seq_len=run.shape.seq_len,
+            global_batch=run.shape.global_batch,
+            num_microbatches=self.m,
+            seed=run.seed,
+        )
+        self.ckpt = CheckpointManager(run.checkpoint_dir, keep=run.keep_checkpoints)
+
+        # --- the paper's scheduler -----------------------------------------
+        self.partitioner = None
+        self.monitor = None
+        self._mb_weights = np.ones(self.m, np.float32)
+        self._worker_of_mb = None
+        if run.partitioner_enabled and cluster is not None:
+            self.partitioner = HeterogeneityAwarePartitioner(
+                cluster.num_workers,
+                risk_aversion=run.partitioner_risk_aversion,
+                seed=run.seed,
+                mu_guess=1.0,
+            )
+            self.monitor = FaultToleranceMonitor(
+                self.partitioner,
+                straggler_sigma=run.straggler_threshold_sigma,
+                heartbeat_timeout=1e9,  # simulated clock; evict on inf times
+            )
+            self._assign_microbatches(equal=True)
+        self._telemetry_f: List[np.ndarray] = []
+        self._telemetry_t: List[np.ndarray] = []
+
+    # ------------------------------------------------------------------ utils
+    def _assign_microbatches(self, equal: bool = False) -> np.ndarray:
+        """Map microbatches to workers per the current frontier split."""
+        k = self.partitioner.num_workers
+        if equal:
+            counts = np.full(k, self.m // k, np.int64)
+            counts[: self.m % k] += 1
+        else:
+            counts = self.partitioner.propose_microbatches(self.m)
+        owner = np.repeat(np.arange(k), counts)[: self.m]
+        self._worker_of_mb = owner
+        return counts
+
+    def current_fracs(self) -> np.ndarray:
+        k = self.partitioner.num_workers
+        counts = np.bincount(self._worker_of_mb, minlength=k)
+        return counts / counts.sum()
+
+    # ------------------------------------------------------------------ resume
+    def try_restore(self) -> bool:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        (self.params, self.opt_state), extra = self.ckpt.restore(
+            (self.params, self.opt_state)
+        )
+        self.step = int(extra["step"])
+        self.data.load_state_dict(extra["data_state"])
+        return True
+
+    def save(self) -> None:
+        self.ckpt.save(
+            self.step,
+            (self.params, self.opt_state),
+            {"step": self.step, "data_state": self.data.state_dict()},
+        )
+
+    # ------------------------------------------------------------------ loop
+    def train(self, steps: int, log_every: int = 10) -> TrainerReport:
+        losses, splits, makespans = [], [], []
+        run = self.run
+        for _ in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in next(self.data).items()}
+            weights = jnp.asarray(self._mb_weights)
+            if self._ef is not None:
+                self.params, self.opt_state, metrics, self._ef = self._step_fn(
+                    self.params, self.opt_state, batch,
+                    jnp.asarray(self.step), weights, self._ef,
+                )
+            else:
+                self.params, self.opt_state, metrics = self._step_fn(
+                    self.params, self.opt_state, batch, jnp.asarray(self.step), weights
+                )
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            self.step += 1
+
+            # ---- telemetry + the paper's scheduler -------------------------
+            if self.partitioner is not None:
+                fracs = self.current_fracs()
+                times = self.cluster.step_times(fracs)
+                flags = self.monitor.observe_step(fracs, times)
+                makespans.append(
+                    float(np.max(times[np.isfinite(times)]))
+                    if np.isfinite(times).any() else float("inf")
+                )
+                self._telemetry_f.append(fracs)
+                self._telemetry_t.append(np.where(np.isfinite(times), times, 1e6))
+
+                if flags["failures"].any():
+                    # elastic: evict, re-split, checkpoint the new world
+                    alive = ~flags["failures"]
+                    self.cluster.specs = [
+                        s for s, a in zip(self.cluster.specs, alive) if a
+                    ]
+                    self.monitor.evict(flags["failures"])
+                    self._assign_microbatches(equal=False)
+                    # telemetry collected for the old fleet shape is stale
+                    self._telemetry_f.clear()
+                    self._telemetry_t.clear()
+                    self.save()
+
+                if self.step % run.partitioner_refit_every == 0 and self._telemetry_f:
+                    f = np.stack(self._telemetry_f, axis=1)  # (K, N)
+                    t = np.stack(self._telemetry_t, axis=1)
+                    self.partitioner.observe(
+                        WorkerTelemetry(jnp.asarray(f), jnp.asarray(t))
+                    )
+                    counts = self._assign_microbatches(equal=False)
+                    splits.append(counts.copy())
+                    self._telemetry_f.clear()
+                    self._telemetry_t.clear()
+
+            if self.step % run.checkpoint_every == 0:
+                self.save()
+        self.ckpt.wait()
+        events = self.monitor.events if self.monitor else []
+        return TrainerReport(self.step, losses, splits, makespans, events)

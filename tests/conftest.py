@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device (the dry-run subprocess sets its own
+# XLA_FLAGS; never set device-count flags here).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

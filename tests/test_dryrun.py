@@ -1,0 +1,35 @@
+"""Dry-run regression: one real cell compiles end-to-end in a subprocess
+(the subprocess owns its own 512-device XLA_FLAGS; never set here)."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell(tmp_path):
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    out = tmp_path / "dryrun"
+    r = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "tinyllama-1.1b", "--shape", "decode_32k",
+            "--mesh", "single", "--out", str(out), "--force",
+        ],
+        cwd=repo,
+        env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"},
+        capture_output=True, text=True, timeout=420,
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    cell = json.loads((out / "tinyllama-1.1b__decode_32k__single.json").read_text())
+    assert cell["chips"] == 256
+    assert cell["full"]["memory"]["peak_bytes_est"] > 0
+    rf = cell["roofline"]
+    assert rf["dominant"] in ("compute_s", "memory_s", "collective_s")
+    assert rf["per_device"]["flops"] > 0
+    # decode must be memory-bound with a single-digit-ms bound at this size
+    assert rf["dominant"] == "memory_s"
+    assert rf["roofline_bound_s"] < 0.05

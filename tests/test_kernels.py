@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True): shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.moments import BetaParams
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.posterior_grid import posterior_grid_pallas
+
+
+@pytest.mark.parametrize("mode", ["alpha", "beta"])
+@pytest.mark.parametrize("g,n", [(64, 100), (300, 777), (512, 2048), (17, 33)])
+def test_posterior_grid_shapes(mode, g, n):
+    key = jax.random.PRNGKey(g * 1000 + n)
+    kf, kt = jax.random.split(key)
+    f = jax.random.uniform(kf, (n,), minval=0.05, maxval=0.95)
+    t = f**0.9 * 25.0 + f**0.7 * 2.0 * jax.random.normal(kt, (n,))
+    grid = jnp.linspace(1e-4, 1 - 1e-4, g, dtype=jnp.float32)
+    mask = (jnp.arange(n) % 7 != 0).astype(jnp.float32)
+    args = (jnp.float32(25.0), jnp.float32(0.25), jnp.float32(0.7),
+            jnp.float32(2.0), jnp.float32(3.0))
+    got = posterior_grid_pallas(
+        grid, t, f, mask, *args, mode=mode, interpret=True,
+        block_g=64, block_n=256,
+    )
+    want = ref.posterior_grid_ref(
+        grid, t, f, args[0], args[1], args[2], args[3], args[4], mask, mode=mode
+    )
+    scale = 1.0 + float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5 * scale)
+
+
+@pytest.mark.parametrize("block_g,block_n", [(8, 128), (128, 512), (256, 1024)])
+def test_posterior_grid_block_invariance(block_g, block_n):
+    """Result must not depend on the tiling."""
+    key = jax.random.PRNGKey(5)
+    kf, kt = jax.random.split(key)
+    n, g = 513, 100
+    f = jax.random.uniform(kf, (n,), minval=0.1, maxval=0.9)
+    t = f * 10.0 + jax.random.normal(kt, (n,))
+    grid = jnp.linspace(1e-4, 1 - 1e-4, g, dtype=jnp.float32)
+    mask = jnp.ones((n,), jnp.float32)
+    out = posterior_grid_pallas(
+        grid, t, f, mask, 10.0, 1.0, 0.9, 2.0, 2.0,
+        mode="alpha", interpret=True, block_g=block_g, block_n=block_n,
+    )
+    want = ref.posterior_grid_ref(
+        grid, t, f, jnp.float32(10.0), jnp.float32(1.0), jnp.float32(0.9),
+        jnp.float32(2.0), jnp.float32(2.0), mask, mode="alpha",
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kvh,d,s", [(2, 8, 2, 64, 300), (1, 4, 4, 32, 128), (3, 9, 3, 16, 1000)]
+)
+def test_decode_attention(b, h, kvh, d, s, dtype):
+    key = jax.random.PRNGKey(b + h + s)
+    kq, kk, kv, kl = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, h, d), dtype)
+    k = jax.random.normal(kk, (b, s, kvh, d), dtype)
+    v = jax.random.normal(kv, (b, s, kvh, d), dtype)
+    length = jax.random.randint(kl, (b,), 1, s + 1)
+    got = decode_attention_pallas(q, k, v, length, block_s=128, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, length)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_decode_attention_empty_tail_blocks_skipped():
+    """Cache fill far below capacity: blocks past length must not contribute."""
+    b, h, kvh, d, s = 2, 4, 1, 32, 2048
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, d))
+    k = jax.random.normal(kk, (b, s, kvh, d))
+    v = jax.random.normal(kv, (b, s, kvh, d))
+    length = jnp.asarray([5, 17], jnp.int32)
+    got = decode_attention_pallas(q, k, v, length, block_s=256, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,t,r,bt", [(2, 64, 128, 16), (1, 100, 300, 32), (3, 17, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lru_scan(b, t, r, bt, dtype):
+    from repro.kernels.lru_scan import lru_scan_pallas
+
+    key = jax.random.PRNGKey(b * t + r)
+    ka, kb, kh = jax.random.split(key, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ka, (b, t, r))).astype(dtype)
+    x = jax.random.normal(kb, (b, t, r), dtype)
+    h0 = jax.random.normal(kh, (b, r), dtype)
+    got = lru_scan_pallas(a, x, h0, block_t=bt, interpret=True)
+    want = ref.lru_scan_ref(a, x, h0)
+    tol = 1e-5 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_lru_scan_continuation_matches_single_pass():
+    """Scanning [0:k] then [k:] with the carried state == one pass (the
+    prefill->decode state-handoff property)."""
+    from repro.kernels.lru_scan import lru_scan_pallas
+
+    key = jax.random.PRNGKey(0)
+    ka, kb = jax.random.split(key)
+    b, t, r, k = 2, 48, 64, 20
+    a = jax.nn.sigmoid(jax.random.normal(ka, (b, t, r)))
+    x = jax.random.normal(kb, (b, t, r))
+    h0 = jnp.zeros((b, r))
+    full = lru_scan_pallas(a, x, h0, block_t=16, interpret=True)
+    first = lru_scan_pallas(a[:, :k], x[:, :k], h0, block_t=16, interpret=True)
+    second = lru_scan_pallas(a[:, k:], x[:, k:], first[:, -1], block_t=16, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(second), np.asarray(full[:, k:]), rtol=1e-5, atol=1e-5
+    )

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests + prefill/decode vs teacher-forced consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import model_zoo
+from repro.models.layers import ApplyCtx
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(cfg, b, t):
+    batch = {"tokens": jnp.mod(jnp.arange(b * t).reshape(b, t), cfg.vocab_size - 1).astype(jnp.int32)}
+    if cfg.vision_patches:
+        batch["vision"] = 0.1 * jnp.ones((b, cfg.vision_patches, cfg.d_model))
+        batch["tokens"] = batch["tokens"][:, : t - cfg.vision_patches]
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jnp.ones((b, cfg.encoder_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_shapes_and_finite(arch, rng_key):
+    cfg = reduced(ARCHS[arch])
+    params = model_zoo.init_model_params(rng_key, cfg)
+    b, t = 2, 16
+    batch = _batch(cfg, b, t)
+    logits, aux = model_zoo.forward_train(cfg, params, batch, ctx=ApplyCtx(mode="train"))
+    assert logits.shape == (b, t, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step_no_nans(arch, rng_key):
+    from repro.configs import RunConfig
+    from repro.configs.base import ShapeConfig
+    from repro.optim import adamw
+    from repro.train import train_step as ts
+
+    cfg = reduced(ARCHS[arch])
+    shape = ShapeConfig("t", seq_len=16, global_batch=4, kind="train")
+    run = RunConfig(model=cfg, shape=shape)
+    params = model_zoo.init_model_params(rng_key, cfg)
+    opt = adamw.init(params)
+    b = _batch(cfg, 4, 16)
+    b["labels"] = jnp.ones_like(b["tokens"])
+    mb = ts.split_microbatches(b, 2)
+    step = ts.make_train_step(cfg, run, ctx=ApplyCtx(mode="train"), num_microbatches=2)
+    params2, opt2, metrics = jax.jit(step)(params, opt, mb, jnp.asarray(0))
+    assert np.isfinite(float(metrics["loss"]))
+    leaves = jax.tree_util.tree_leaves(params2)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in leaves)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_teacher_forcing(arch, rng_key):
+    """prefill(t[:k]) + decode steps must reproduce the full-sequence forward
+    logits — the strongest cache-correctness property we can test."""
+    cfg = reduced(ARCHS[arch])
+    params = model_zoo.init_model_params(rng_key, cfg)
+    b, t, k = 2, 12, 8
+    batch = _batch(cfg, b, t)
+    full_logits, _ = model_zoo.forward_train(
+        cfg, params, batch, ctx=ApplyCtx(mode="train")
+    )
+
+    # prefill on the first k tokens
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :k]
+    cache = model_zoo.init_cache(cfg, b, 32, jnp.float32)
+    lg, cache = model_zoo.prefill(cfg, params, pre, cache, ctx=ApplyCtx(mode="prefill"))
+    offset = cfg.vision_patches if cfg.vision_patches else 0
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full_logits[:, offset + k - 1]),
+        rtol=2e-2, atol=2e-3,
+    )
+
+    # decode the next tokens teacher-forced; logits must match the full pass
+    toks = batch["tokens"]
+    n_text = toks.shape[1]
+    for j in range(k, min(n_text, k + 3)):
+        lg, cache = model_zoo.decode_step(
+            cfg, params, toks[:, j : j + 1], cache, ctx=ApplyCtx(mode="decode")
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full_logits[:, offset + j]),
+            rtol=2e-2, atol=2e-3,
+            err_msg=f"{arch} decode step {j}",
+        )
+
+
+def test_local_attention_window_masking(rng_key):
+    """recurrentgemma's local attention: token far outside the window must
+    not influence the output."""
+    cfg = reduced(ARCHS["recurrentgemma-2b"], local_window=4, num_layers=3)
+    params = model_zoo.init_model_params(rng_key, cfg)
+    b, t = 1, 12
+    base = _batch(cfg, b, t)
+    pert = dict(base)
+    pert["tokens"] = base["tokens"].at[:, 0].set(
+        (base["tokens"][:, 0] + 7) % cfg.vocab_size
+    )
+    lg1, _ = model_zoo.forward_train(cfg, params, base, ctx=ApplyCtx(mode="train"))
+    lg2, _ = model_zoo.forward_train(cfg, params, pert, ctx=ApplyCtx(mode="train"))
+    # attention part is windowed, but the RG-LRU recurrence legitimately
+    # carries long-range state; perturbing tokens must keep outputs finite
+    # and equal at position 0 neighborhoods is NOT required.  Instead check:
+    # last-position logits change little vs changing the last token.
+    pert_last = dict(base)
+    pert_last["tokens"] = base["tokens"].at[:, -1].set(
+        (base["tokens"][:, -1] + 7) % cfg.vocab_size
+    )
+    lg3, _ = model_zoo.forward_train(cfg, params, pert_last, ctx=ApplyCtx(mode="train"))
+    d_far = float(jnp.max(jnp.abs(lg2[:, -1] - lg1[:, -1])))
+    d_near = float(jnp.max(jnp.abs(lg3[:, -1] - lg1[:, -1])))
+    assert d_near > d_far  # recent context dominates
+
+
+def test_moe_router_load_balance_loss_positive(rng_key):
+    from repro.models import moe as moe_lib
+
+    cfg = reduced(ARCHS["granite-moe-3b-a800m"])
+    probs = jax.nn.softmax(jax.random.normal(rng_key, (64, cfg.num_experts)))
+    aux = moe_lib.load_balance_loss(cfg, probs)
+    assert 0.5 < float(aux) < 4.0  # ~1 near balance, grows with skew
+    # perfectly collapsed routing is maximally penalized
+    collapsed = jnp.zeros((64, cfg.num_experts)).at[:, 0].set(1.0)
+    assert float(moe_lib.load_balance_loss(cfg, collapsed)) >= float(aux)

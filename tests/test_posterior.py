@@ -1,0 +1,79 @@
+"""Normal-Gamma conjugate updates (Eqs 6-9) against closed forms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.posterior import (
+    NormalGammaParams,
+    log_likelihood,
+    update_normal_gamma,
+)
+
+
+def test_f_equal_one_reduces_to_standard_normal_gamma():
+    """With f_n = 1 the model is iid N(mu, 1/lam): Eqs 6-9 must reduce to the
+    textbook Normal-Gamma posterior."""
+    rng = np.random.default_rng(0)
+    t = jnp.asarray(rng.normal(5.0, 2.0, size=200), jnp.float32)
+    f = jnp.ones_like(t)
+    prior = NormalGammaParams(
+        mu0=jnp.float32(0.0), kappa0=jnp.float32(1.0),
+        nu0=jnp.float32(2.0), psi0=jnp.float32(2.0),
+    )
+    post = update_normal_gamma(prior, t, f, jnp.float32(1.0), jnp.float32(1.0))
+    n = t.shape[0]
+    tbar = float(jnp.mean(t))
+    mu_exp = (prior.mu0 * prior.kappa0 + n * tbar) / (prior.kappa0 + n)
+    kappa_exp = prior.kappa0 + n
+    nu_exp = prior.nu0 + n / 2
+    # psi: psi0 + 0.5*(sum t^2 + mu0^2 k0 - muN^2 kN)
+    psi_exp = prior.psi0 + 0.5 * (
+        float(jnp.sum(t * t)) + float(prior.mu0) ** 2 * float(prior.kappa0)
+        - mu_exp**2 * kappa_exp
+    )
+    np.testing.assert_allclose(float(post.mu0), mu_exp, rtol=1e-5)
+    np.testing.assert_allclose(float(post.kappa0), kappa_exp, rtol=1e-6)
+    np.testing.assert_allclose(float(post.nu0), nu_exp, rtol=1e-6)
+    np.testing.assert_allclose(float(post.psi0), psi_exp, rtol=1e-4)
+
+
+def test_posterior_concentrates_on_truth():
+    """Posterior mean -> true mu as N grows (alpha, beta known)."""
+    rng = np.random.default_rng(1)
+    mu, sigma, alpha, beta = 30.0, 2.0, 0.9, 0.8
+    for n, tol in [(50, 1.0), (2000, 0.2)]:
+        f = rng.uniform(0.1, 1.0, size=n).astype(np.float32)
+        t = f**alpha * mu + f**beta * sigma * rng.normal(size=n)
+        post = update_normal_gamma(
+            NormalGammaParams.default(1.0),
+            jnp.asarray(t, jnp.float32), jnp.asarray(f, jnp.float32),
+            jnp.float32(alpha), jnp.float32(beta),
+        )
+        assert abs(float(post.mu0) - mu) < tol
+
+
+def test_mask_matches_truncation():
+    rng = np.random.default_rng(2)
+    t = jnp.asarray(rng.normal(10, 1, size=64), jnp.float32)
+    f = jnp.asarray(rng.uniform(0.2, 1.0, size=64), jnp.float32)
+    prior = NormalGammaParams.default(10.0)
+    a, b = jnp.float32(0.9), jnp.float32(0.7)
+    mask = (jnp.arange(64) < 40).astype(jnp.float32)
+    p1 = update_normal_gamma(prior, t, f, a, b, mask)
+    p2 = update_normal_gamma(prior, t[:40], f[:40], a, b)
+    for x, y in zip(p1, p2):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-4)
+
+
+def test_log_likelihood_peaks_at_truth():
+    rng = np.random.default_rng(3)
+    mu, sigma, alpha, beta = 20.0, 1.5, 0.85, 0.75
+    f = jnp.asarray(rng.uniform(0.1, 1.0, 512), jnp.float32)
+    t = f**alpha * mu + f**beta * sigma * jnp.asarray(rng.normal(size=512), jnp.float32)
+    lam = 1.0 / sigma**2
+    ll_true = float(log_likelihood(t, f, mu, lam, alpha, beta))
+    for d_mu in (-3.0, 3.0):
+        assert float(log_likelihood(t, f, mu + d_mu, lam, alpha, beta)) < ll_true
+    for d_a in (-0.2, 0.1):
+        assert float(log_likelihood(t, f, mu, lam, alpha + d_a, beta)) < ll_true

@@ -1,0 +1,93 @@
+"""End-to-end behaviour: the paper's scheduler inside the training loop.
+
+These are the system-level claims of the reproduction:
+  1. training converges while the Bayesian partitioner rebalances work;
+  2. the learned split beats a naive equal split on makespan;
+  3. a worker failure is detected, the fleet shrinks, training continues;
+  4. checkpoint/restart resumes exactly (params + data cursor).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_arch, reduced
+from repro.configs.base import ShapeConfig
+from repro.distributed.simulated_cluster import SimulatedCluster, WorkerSpec
+from repro.train.trainer import Trainer
+
+
+def _run_cfg(tmp_path, steps=24, **kw):
+    cfg = reduced(get_arch("smollm-135m"))
+    shape = ShapeConfig("t", seq_len=32, global_batch=8, kind="train")
+    return RunConfig(
+        model=cfg, shape=shape, checkpoint_dir=str(tmp_path),
+        total_steps=steps, warmup_steps=2, checkpoint_every=8,
+        partitioner_refit_every=6, **kw,
+    )
+
+
+def test_training_converges_and_rebalances(tmp_path):
+    run = _run_cfg(tmp_path, steps=24)
+    cluster = SimulatedCluster(
+        [WorkerSpec(5.0, 0.5), WorkerSpec(20.0, 1.0)], seed=0
+    )
+    tr = Trainer(run, cluster=cluster, num_microbatches=8)
+    rep = tr.train(24)
+    assert rep.losses[-1] < rep.losses[0]
+    # learned split favors the 4x-faster worker 0
+    assert rep.splits, "partitioner refits must have occurred"
+    final = rep.splits[-1]
+    assert final[0] > final[1]
+    # makespan improves vs the initial equal split
+    k = max(len(rep.makespans) // 4, 1)
+    assert np.mean(rep.makespans[-k:]) < np.mean(rep.makespans[:k])
+
+
+def test_failure_detection_and_elastic_continue(tmp_path):
+    run = _run_cfg(tmp_path, steps=20)
+    run = __import__("dataclasses").replace(
+        run, shape=ShapeConfig("t", seq_len=32, global_batch=12, kind="train")
+    )
+    cluster = SimulatedCluster(
+        [WorkerSpec(5.0, 0.5), WorkerSpec(6.0, 0.5), WorkerSpec(5.5, 0.5)], seed=1
+    )
+    tr = Trainer(run, cluster=cluster, num_microbatches=6)
+    tr.train(6)
+    assert tr.partitioner.num_workers == 3
+    cluster.fail(2)
+    rep = tr.train(8)
+    assert tr.partitioner.num_workers == 2  # evicted
+    assert any(e["type"] == "failure" for e in tr.monitor.events)
+    assert np.isfinite(rep.losses[-1])
+    # all microbatches now assigned to survivors
+    assert set(np.unique(tr._worker_of_mb)) <= {0, 1}
+
+
+def test_checkpoint_restart_resumes_exactly(tmp_path):
+    run = _run_cfg(tmp_path, steps=16)
+    cluster = SimulatedCluster([WorkerSpec(5.0, 0.5), WorkerSpec(7.0, 0.5)], seed=2)
+    tr1 = Trainer(run, cluster=cluster, num_microbatches=4)
+    tr1.train(8)
+    tr1.save()
+    tr1.ckpt.wait()
+    loss_ref = tr1.train(4).losses
+
+    tr2 = Trainer(run, cluster=SimulatedCluster(
+        [WorkerSpec(5.0, 0.5), WorkerSpec(7.0, 0.5)], seed=2), num_microbatches=4)
+    assert tr2.try_restore()
+    assert tr2.step == 8
+    loss_resumed = tr2.train(4).losses
+    np.testing.assert_allclose(loss_resumed, loss_ref, rtol=1e-4)
+
+
+def test_straggler_soft_detection(tmp_path):
+    run = _run_cfg(tmp_path, steps=30, straggler_threshold_sigma=2.0)
+    cluster = SimulatedCluster(
+        [WorkerSpec(5.0, 0.3), WorkerSpec(5.0, 0.3), WorkerSpec(5.0, 0.3),
+         WorkerSpec(5.0, 0.3)], seed=3
+    )
+    tr = Trainer(run, cluster=cluster, num_microbatches=8)
+    tr.train(12)  # learn the healthy regime
+    cluster.degrade(1, mu_factor=6.0)  # worker 1 becomes a straggler
+    tr.train(12)
+    assert any(e["type"] == "straggler" and 1 in e["workers"]
+               for e in tr.monitor.events)
