@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro import sched
 from repro.core import gibbs
 from repro.core.posterior import log_likelihood
 
@@ -60,6 +61,16 @@ def main() -> None:
     us_fleet = time_fn(fleet_fn, iters=3)
     emit("gibbs_fleet_64workers", us_fleet,
          f"per-worker={us_fleet/k:.1f}us ({us/ (us_fleet/k):.1f}x vmap win)")
+
+    # same fleet through the pure scheduler transition (jit observe), i.e. the
+    # state-in/state-out path the trainer/server actually run in production
+    config = sched.SchedulerConfig(n_iters=15, grid_size=256, mu_guess=10.0)
+    state = sched.init(config, k, jax.random.PRNGKey(3))
+    telem = sched.Telemetry(fracs=ff, times=tf)
+    obs_fn = lambda: sched.observe(state, telem, config)[1]
+    us_obs = time_fn(obs_fn, iters=3)
+    emit("sched_observe_64workers", us_obs,
+         f"per-worker={us_obs/k:.1f}us (jitted SchedulerState transition)")
 
 
 if __name__ == "__main__":

@@ -3,19 +3,18 @@ equal split vs the oracle (true-parameter) split, on simulated fleets.
 
 This is the deployable claim of the paper: learning (mu, sigma, alpha, beta)
 online buys back most of the oracle's advantage over naive splitting.
+Exercises the pure-functional ``repro.sched`` API end to end (jitted
+observe/propose transitions, batched quantization refinement).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core.frontier import UnitParams, mean_var_completion
-from repro.core.partitioner import (
-    HeterogeneityAwarePartitioner,
-    WorkerTelemetry,
-    optimize_fractions,
-)
+from repro import sched
+from repro.core.frontier import UnitParams
 from repro.distributed.simulated_cluster import SimulatedCluster, WorkerSpec
 
 
@@ -31,18 +30,21 @@ def main() -> None:
             )
         ]
         cluster = SimulatedCluster(specs, seed=1)
-        part = HeterogeneityAwarePartitioner(k, seed=0, n_iters=12,
-                                             grid_size=128, mu_guess=15.0)
+        config = sched.SchedulerConfig(n_iters=12, grid_size=128, mu_guess=15.0)
+        state = sched.init(config, k, jax.random.PRNGKey(0))
         # online: observe 8 batches of 16 steps with the CURRENT split
         for _ in range(8):
-            fr = part.propose_fractions()[0]
+            fr = np.asarray(sched.propose(state, config)[0])
             fmat = np.tile(fr[:, None], (1, 16))
             tmat = np.stack([cluster.step_times(fr) for _ in range(16)], axis=1)
-            part.observe(WorkerTelemetry(jnp.asarray(fmat), jnp.asarray(tmat)))
+            state, _ = sched.observe(
+                state, sched.Telemetry(jnp.asarray(fmat), jnp.asarray(tmat)),
+                config,
+            )
 
-        learned = part.propose_fractions()[0]
+        learned = np.asarray(sched.propose(state, config)[0])
         naive = np.full(k, 1.0 / k)
-        oracle, _, _ = optimize_fractions(cluster.true_params())
+        oracle, _ = sched.solve_fractions(cluster.true_params())
 
         e_learned = cluster.oracle_makespan(learned)
         e_naive = cluster.oracle_makespan(naive)
@@ -56,8 +58,17 @@ def main() -> None:
 
     # optimizer throughput (called on every refit)
     p = UnitParams.of(list(rng.uniform(5, 40, 64)), list(rng.uniform(0.5, 3, 64)))
-    us = time_fn(lambda: optimize_fractions(p)[0], iters=5)
-    emit("optimize_fractions_k64", us, "300 adam steps on the simplex")
+    us = time_fn(lambda: sched.solve_fractions(p)[0], iters=5)
+    emit("solve_fractions_k64", us,
+         "equalizing init + adam refine + candidate select, jitted")
+
+    # batched quantization: K=64 counts refined in one device program
+    fr64, _ = sched.solve_fractions(p)
+    us_q = time_fn(
+        lambda: sched.quantize_fractions(np.asarray(fr64), 512, p), iters=3
+    )
+    emit("quantize_fractions_k64_mb512", us_q,
+         "largest-remainder + batched greedy refinement")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """Benchmark harness: one module per paper table/figure + system benches.
 
-Emits ``name,us_per_call,derived`` CSV rows.  ``python -m benchmarks.run``.
+Emits ``name,us_per_call,derived`` CSV rows.  ``python -m benchmarks.run``;
+``--smoke`` runs the fast CI subset (frontier sweep + partitioner quality)
+so a CPU-only runner finishes in minutes.
 """
 from __future__ import annotations
 
@@ -25,11 +27,21 @@ ALL = [
     ("train_step", bench_train_step.main),
 ]
 
+SMOKE = [
+    ("fig1_2_frontier", bench_frontier.main),
+    ("partitioner_vs_naive", bench_partitioner.main),
+]
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    unknown = [a for a in argv if a != "--smoke"]
+    if unknown:
+        sys.exit(f"usage: python -m benchmarks.run [--smoke]  (got {unknown})")
+    suite = SMOKE if "--smoke" in argv else ALL
     print("name,us_per_call,derived")
     failed = []
-    for name, fn in ALL:
+    for name, fn in suite:
         print(f"# --- {name} ---")
         try:
             fn()

@@ -48,6 +48,12 @@ tr.save()
 tr.ckpt.wait()
 tr2 = Trainer(run, cluster=cluster, num_microbatches=6)
 assert tr2.try_restore()
-print(f"  resumed at step {tr2.step}; continuing 8 more steps")
+# the scheduler's Bayesian beliefs are part of the checkpoint pytree now:
+# the restarted trainer proposes from the LEARNED posteriors, not fresh priors
+mu_saved = np.asarray(tr.partitioner.state.gibbs.mu)
+mu_restored = np.asarray(tr2.partitioner.state.gibbs.mu)
+np.testing.assert_array_equal(mu_saved, mu_restored)
+print(f"  resumed at step {tr2.step}; beliefs restored bit-exactly "
+      f"(mu={np.round(mu_restored, 2)}); continuing 8 more steps")
 rep4 = tr2.train(8)
 print(f"  post-resume loss: {rep4.losses[-1]:.3f} (finite={np.isfinite(rep4.losses[-1])})")

@@ -1,6 +1,7 @@
 """Serving with QoS-aware batch partitioning: a request batch is split across
-heterogeneous replicas using the learned frontier (min latency, or a variance
-budget for tail-latency control).
+heterogeneous replicas using the learned frontier, with the QoS target
+expressed as a pluggable ``repro.sched.Objective`` (min latency, risk-averse
+mean+var, or a deadline quantile P(t <= eps) for tail-latency control).
 
     PYTHONPATH=src python examples/serve_partitioned.py
 """
@@ -8,12 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sched
 from repro.configs import get_arch, reduced
-from repro.core.partitioner import (
-    HeterogeneityAwarePartitioner,
-    WorkerTelemetry,
-    quantize_fractions,
-)
 from repro.distributed.simulated_cluster import SimulatedCluster, WorkerSpec
 from repro.models import model_zoo
 from repro.models.layers import ApplyCtx
@@ -29,15 +26,23 @@ cluster = SimulatedCluster(
      WorkerSpec(3.0, 0.3, 0.92, 0.88)],
     seed=0,
 )
-part = HeterogeneityAwarePartitioner(3, seed=1, n_iters=12, grid_size=128,
-                                     mu_guess=3.0)
+
+# --- pure-functional scheduler: explicit state, pure transitions ------------
+config = sched.SchedulerConfig(
+    objective=sched.Objective.mean(), n_iters=12, grid_size=128, mu_guess=3.0
+)
+state = sched.init(config, 3, jax.random.PRNGKey(1))
 
 # --- online phase: serve batches, learn, re-split ---------------------------
 BATCH = 24
 rng = np.random.default_rng(0)
 print("round | split (requests/replica) | batch latency (simulated)")
 for rnd in range(8):
-    counts = part.propose_microbatches(BATCH)
+    fracs_prop, _ = sched.propose(state, config)  # jitted
+    counts = sched.quantize_fractions(
+        np.asarray(fracs_prop), BATCH, sched.unit_params(state),
+        objective=config.objective,
+    )
     fracs = counts / counts.sum()
 
     # actually run the model for one replica's shard (semantics demo)
@@ -52,19 +57,32 @@ for rnd in range(8):
     # telemetry: measured (simulated) per-replica latency for its fraction
     times = np.stack([cluster.step_times(fracs) for _ in range(8)], axis=1)
     fmat = np.tile(fracs[:, None], (1, 8))
-    part.observe(WorkerTelemetry(jnp.asarray(fmat), jnp.asarray(times)))
+    state, _ = sched.observe(
+        state, sched.Telemetry(jnp.asarray(fmat), jnp.asarray(times)), config
+    )
     lat = float(np.max(times.mean(axis=1)))
     print(f"  {rnd}   | {counts} | {lat:.2f}s")
 
-fr, e, v = part.propose_fractions()
-print(f"\nlearned split {np.round(fr, 3)}  E[latency]={e:.2f}s  Var={v:.3f}")
+fr, stats = sched.propose(state, config)
+fr = np.asarray(fr)
+print(f"\nlearned split {np.round(fr, 3)}  "
+      f"E[latency]={float(stats.e_t):.2f}s  Var={float(stats.var):.3f}")
 eq = cluster.oracle_makespan(np.full(3, 1 / 3))
 lr = cluster.oracle_makespan(fr)
 print(f"true expected batch latency: equal={eq:.2f}s learned={lr:.2f}s "
       f"({100 * (eq - lr) / eq:.0f}% faster)")
 
-# tail-latency mode: spend a little mean latency to buy predictability
-part.risk_aversion = 5.0
-fr_r, e_r, v_r = part.propose_fractions()
-print(f"risk-averse split {np.round(fr_r, 3)}  E={e_r:.2f}s Var={v_r:.3f} "
-      f"(vs Var={v:.3f} at min-mean)")
+# tail-latency mode: same beliefs, different objective — spend a little mean
+# latency to buy predictability.  Pure API: just score under a new Objective.
+risk_cfg = sched.SchedulerConfig(objective=sched.Objective.mean_var(5.0))
+fr_r, st_r = sched.propose(state, risk_cfg)
+print(f"risk-averse split {np.round(np.asarray(fr_r), 3)}  "
+      f"E={float(st_r.e_t):.2f}s Var={float(st_r.var):.3f} "
+      f"(vs Var={float(stats.var):.3f} at min-mean)")
+
+# deadline mode: maximize P(batch completes within eps)
+eps = 1.2 * float(stats.e_t)
+dl_cfg = sched.SchedulerConfig(objective=sched.Objective.deadline_quantile(eps))
+fr_d, st_d = sched.propose(state, dl_cfg)
+print(f"deadline({eps:.2f}s) split {np.round(np.asarray(fr_d), 3)}  "
+      f"P(t<=eps)={-float(st_d.score):.3f}")

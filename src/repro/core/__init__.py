@@ -27,12 +27,6 @@ from .moments import (
     moments_from_log_density,
     update_alpha_beta_params,
 )
-from .partitioner import (
-    HeterogeneityAwarePartitioner,
-    WorkerTelemetry,
-    optimize_fractions,
-    quantize_fractions,
-)
 from .posterior import (
     NormalGammaParams,
     log_likelihood,
@@ -75,3 +69,21 @@ __all__ = [
     "update_alpha_beta_params",
     "update_normal_gamma",
 ]
+
+# The legacy partitioner layer now delegates to the pure-functional
+# ``repro.sched`` package, which itself builds on this one — so its names are
+# resolved lazily (PEP 562) to keep the import graph acyclic.
+_PARTITIONER_NAMES = (
+    "HeterogeneityAwarePartitioner",
+    "WorkerTelemetry",
+    "optimize_fractions",
+    "quantize_fractions",
+)
+
+
+def __getattr__(name):
+    if name in _PARTITIONER_NAMES:
+        from . import partitioner
+
+        return getattr(partitioner, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

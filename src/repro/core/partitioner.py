@@ -1,42 +1,42 @@
-"""K-way workflow partitioner built on the learned completion-time models.
+"""Deprecated compatibility layer over ``repro.sched``.
 
-Two layers:
+The online partitioning API now lives in ``repro.sched`` as a pure-functional
+state-in/state-out design (pytree ``SchedulerState``, pluggable ``Objective``,
+jit/vmap/checkpoint-friendly transitions).  This module keeps the original
+entry points importable:
 
-  * ``optimize_fractions`` — continuous frontier search on the K-simplex via
-    projected gradient (Adam on softmax logits); the quadrature in
-    ``frontier.mean_var_completion`` is differentiable.
-  * ``quantize_fractions`` — SPMD reality: fractions are realized as integer
-    microbatch counts (static shapes, no recompilation).  Largest-remainder
-    rounding followed by greedy 1-microbatch moves that directly minimize the
-    expected-makespan objective on the lattice.
+  * ``optimize_fractions`` / ``quantize_fractions`` — thin delegates with the
+    legacy ``risk_aversion`` float mapped onto ``Objective.mean_var``;
+  * ``WorkerTelemetry`` — alias of ``sched.Telemetry``;
+  * ``HeterogeneityAwarePartitioner`` — deprecated wrapper around
+    ``sched.Scheduler`` (emits ``DeprecationWarning`` on construction).
 
-``HeterogeneityAwarePartitioner`` is the online driver used by the trainer and
-the server: feed it (fractions, measured times) telemetry; it Gibbs-updates the
-per-worker posteriors (chained priors, Algorithm 1) and emits new splits plus
-straggler anomaly scores.
+New code should import from ``repro.sched`` directly.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional, Tuple
+import warnings
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import gibbs
-from .frontier import UnitParams, mean_var_completion
-from .posterior import posterior_predictive_logpdf
+from repro.sched.objectives import Objective
+from repro.sched.quantize import quantize_fractions as _quantize
+from repro.sched.scheduler import Scheduler, SchedulerConfig, Telemetry, solve_fractions
+
+from .frontier import UnitParams
 
 Array = jax.Array
 
-
-def _objective(fracs: Array, params: UnitParams, risk_aversion: float) -> Array:
-    e_t, var = mean_var_completion(fracs, params)
-    return e_t + risk_aversion * var
+# Legacy name: telemetry batches are plain (fracs, times) pairs.
+WorkerTelemetry = Telemetry
 
 
-@functools.partial(jax.jit, static_argnames=("steps",))
+def _legacy_objective(risk_aversion: float) -> Objective:
+    return Objective.mean_var(risk_aversion) if risk_aversion else Objective.mean()
+
+
 def optimize_fractions(
     params: UnitParams,
     *,
@@ -46,36 +46,13 @@ def optimize_fractions(
 ) -> Tuple[Array, Array, Array]:
     """Frontier point on the K-simplex: min E[max_k t_k] + ra * Var.
 
-    Adam on logits; fractions = softmax(logits).  Initialized at the
-    closed-form heuristic f_k ∝ (1/mu_k) (equalize linear-scaling means).
+    Legacy signature; delegates to ``sched.solve_fractions``.
     Returns (fractions, expected_makespan, variance).
     """
-    k = params.mu.shape[0]
-    inv = 1.0 / jnp.maximum(params.mu, 1e-9)
-    logits0 = jnp.log(inv / jnp.sum(inv))
-
-    def loss(logits):
-        fracs = jax.nn.softmax(logits)
-        return _objective(fracs, params, risk_aversion)
-
-    grad = jax.grad(loss)
-
-    def step(carry, _):
-        logits, m, v, t = carry
-        g = grad(logits)
-        t = t + 1.0
-        m = 0.9 * m + 0.1 * g
-        v = 0.999 * v + 0.001 * g * g
-        mh = m / (1.0 - 0.9**t)
-        vh = v / (1.0 - 0.999**t)
-        logits = logits - lr * mh / (jnp.sqrt(vh) + 1e-8)
-        return (logits, m, v, t), None
-
-    init = (logits0, jnp.zeros((k,)), jnp.zeros((k,)), jnp.asarray(0.0))
-    (logits, _, _, _), _ = jax.lax.scan(step, init, None, length=steps)
-    fracs = jax.nn.softmax(logits)
-    e_t, var = mean_var_completion(fracs, params)
-    return fracs, e_t, var
+    fracs, stats = solve_fractions(
+        params, objective=_legacy_objective(risk_aversion), steps=steps, lr=lr
+    )
+    return fracs, stats.e_t, stats.var
 
 
 def quantize_fractions(
@@ -88,73 +65,24 @@ def quantize_fractions(
 ) -> np.ndarray:
     """Round simplex fractions to integer microbatch counts summing to total.
 
-    Largest-remainder rounding, then greedy donor->receiver single-microbatch
-    moves accepted only if they reduce the true (quantized) objective.
+    Legacy signature; delegates to ``sched.quantize_fractions`` (batched
+    on-device refinement).
     """
-    k = len(fracs)
-    if total_microbatches < k * min_per_worker:
-        raise ValueError(
-            f"{total_microbatches} microbatches cannot give {k} workers "
-            f">= {min_per_worker} each"
-        )
-    raw = np.asarray(fracs, np.float64) * total_microbatches
-    counts = np.maximum(np.floor(raw).astype(np.int64), min_per_worker)
-    while counts.sum() > total_microbatches:
-        # Shed from the largest over-allocated worker (keep the floor).
-        order = np.argsort(-(counts - raw))
-        for idx in order:
-            if counts[idx] > min_per_worker:
-                counts[idx] -= 1
-                break
-    rema = raw - counts
-    while counts.sum() < total_microbatches:
-        idx = int(np.argmax(rema))
-        counts[idx] += 1
-        rema[idx] -= 1.0
-
-    if params is None:
-        return counts
-
-    def obj(c: np.ndarray) -> float:
-        fr = jnp.asarray(c / total_microbatches, jnp.float32)
-        e_t, var = mean_var_completion(fr, params)
-        return float(e_t + risk_aversion * var)
-
-    best = obj(counts)
-    for _ in range(refine_passes):
-        improved = False
-        for donor in range(k):
-            if counts[donor] <= min_per_worker:
-                continue
-            for recv in range(k):
-                if recv == donor:
-                    continue
-                trial = counts.copy()
-                trial[donor] -= 1
-                trial[recv] += 1
-                val = obj(trial)
-                if val < best - 1e-9:
-                    counts, best, improved = trial, val, True
-        if not improved:
-            break
-    return counts
+    return _quantize(
+        fracs,
+        total_microbatches,
+        params,
+        objective=_legacy_objective(risk_aversion),
+        min_per_worker=min_per_worker,
+        refine_passes=refine_passes,
+    )
 
 
-class WorkerTelemetry(NamedTuple):
-    """One batch of per-worker observations: fractions worked and times taken."""
+class HeterogeneityAwarePartitioner(Scheduler):
+    """Deprecated: use ``repro.sched.Scheduler`` (or the pure functions).
 
-    fracs: Array  # (K, N) workload fraction each worker processed
-    times: Array  # (K, N) measured completion times
-
-
-class HeterogeneityAwarePartitioner:
-    """Online Bayesian partitioner over K processing units (pods/workers).
-
-    The paper's estimator wrapped as the scheduler the trainer/server call:
-
-      observe(telemetry)  -> Gibbs-update every worker's posterior (vmapped)
-      propose(total_mb)   -> microbatch counts on the efficient frontier
-      anomaly_scores(...) -> posterior-predictive log-likelihoods (stragglers)
+    Preserves the original constructor and the mutable ``risk_aversion``
+    attribute; everything else is inherited from the functional shell.
     """
 
     def __init__(
@@ -168,102 +96,28 @@ class HeterogeneityAwarePartitioner:
         mu_guess: float = 1.0,
         discount: float = 0.9,
     ):
-        self.num_workers = num_workers
-        self.risk_aversion = risk_aversion
-        self.n_iters = n_iters
-        self.grid_size = grid_size
-        self.discount = discount
-        key = jax.random.PRNGKey(seed)
-        keys = jax.random.split(key, num_workers)
-        self.states: gibbs.GibbsState = jax.vmap(
-            lambda k: gibbs.init_state(k, mu_guess=mu_guess)
-        )(keys)
-        self._ewma_ll = np.zeros(num_workers, np.float64)
-        self._ewma_initialized = False
-        self.history_ll: list = []
-
-    # ---- estimation ------------------------------------------------------
-    def observe(self, telemetry: WorkerTelemetry) -> Array:
-        """Gibbs-update every worker's posterior from one telemetry batch.
-
-        A power-prior forgetting factor is applied before each batch so the
-        estimator tracks drifting systems (see gibbs.discount_state)."""
-        self.states = jax.vmap(
-            lambda st: gibbs.discount_state(st, self.discount)
-        )(self.states)
-        step = jax.vmap(
-            lambda st, t, f: gibbs.gibbs_batch(
-                st, t, f, n_iters=self.n_iters, grid_size=self.grid_size
-            )
+        warnings.warn(
+            "HeterogeneityAwarePartitioner is deprecated; use "
+            "repro.sched.Scheduler or the pure repro.sched API",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        self.states, ll = step(self.states, telemetry.times, telemetry.fracs)
-        self.history_ll.append(np.asarray(ll))
-        return ll
-
-    def unit_params(self) -> UnitParams:
-        st = self.states
-        return UnitParams(mu=st.mu, sigma=st.sigma, alpha=st.alpha, beta=st.beta)
-
-    # ---- partitioning ----------------------------------------------------
-    def propose_fractions(self) -> Tuple[np.ndarray, float, float]:
-        fracs, e_t, var = optimize_fractions(
-            self.unit_params(), risk_aversion=self.risk_aversion
-        )
-        return np.asarray(fracs), float(e_t), float(var)
-
-    def propose_microbatches(
-        self, total_microbatches: int, min_per_worker: int = 1
-    ) -> np.ndarray:
-        fracs, _, _ = self.propose_fractions()
-        return quantize_fractions(
-            fracs,
-            total_microbatches,
-            self.unit_params(),
-            self.risk_aversion,
-            min_per_worker,
+        super().__init__(
+            num_workers,
+            config=SchedulerConfig(
+                objective=_legacy_objective(risk_aversion),
+                n_iters=n_iters,
+                grid_size=grid_size,
+                mu_guess=mu_guess,
+                discount=discount,
+            ),
+            seed=seed,
         )
 
-    # ---- anomaly / straggler detection -----------------------------------
-    def anomaly_scores(
-        self, fracs: Array, times: Array, ewma: float = 0.8
-    ) -> np.ndarray:
-        """Negative posterior-predictive log-likelihood per worker (EWMA'd).
+    @property
+    def risk_aversion(self) -> float:
+        return self.config.objective.risk_aversion
 
-        High score == recent behaviour inconsistent with the learned model.
-        """
-        st = self.states
-        ll = jax.vmap(posterior_predictive_logpdf)(
-            jnp.asarray(times), jnp.asarray(fracs), st.mu, st.lam, st.alpha, st.beta
-        )
-        score = -np.asarray(jnp.atleast_1d(ll), np.float64)
-        if not self._ewma_initialized:
-            self._ewma_ll = score
-            self._ewma_initialized = True
-        else:
-            self._ewma_ll = ewma * self._ewma_ll + (1.0 - ewma) * score
-        return self._ewma_ll
-
-    def flag_stragglers(self, threshold_sigma: float = 3.0) -> np.ndarray:
-        """Workers whose anomaly score is an outlier vs the fleet."""
-        s = self._ewma_ll
-        med = np.median(s)
-        mad = np.median(np.abs(s - med)) + 1e-9
-        return s > med + threshold_sigma * 1.4826 * mad
-
-    # ---- elastic membership ----------------------------------------------
-    def remove_workers(self, dead: np.ndarray) -> None:
-        """Drop failed workers from the fleet (elastic down-scale)."""
-        keep = ~np.asarray(dead, bool)
-        take = lambda x: x[keep] if hasattr(x, "shape") and x.shape[:1] == (self.num_workers,) else x
-        self.states = jax.tree_util.tree_map(take, self.states)
-        self._ewma_ll = self._ewma_ll[keep]
-        self.num_workers = int(keep.sum())
-
-    def add_workers(self, count: int, seed: int = 1234, mu_guess: float = 1.0) -> None:
-        """Admit new workers with fresh priors (elastic up-scale)."""
-        keys = jax.random.split(jax.random.PRNGKey(seed), count)
-        fresh = jax.vmap(lambda k: gibbs.init_state(k, mu_guess=mu_guess))(keys)
-        cat = lambda a, b: jnp.concatenate([a, b], axis=0)
-        self.states = jax.tree_util.tree_map(cat, self.states, fresh)
-        self._ewma_ll = np.concatenate([self._ewma_ll, np.zeros(count)])
-        self.num_workers += count
+    @risk_aversion.setter
+    def risk_aversion(self, value: float) -> None:
+        self.objective = _legacy_objective(value)

@@ -20,7 +20,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.partitioner import HeterogeneityAwarePartitioner
+from repro.sched import Scheduler
 
 
 @dataclasses.dataclass
@@ -34,7 +34,7 @@ class WorkerHealth:
 class FaultToleranceMonitor:
     def __init__(
         self,
-        partitioner: HeterogeneityAwarePartitioner,
+        partitioner: Scheduler,
         *,
         heartbeat_timeout: float = 60.0,
         straggler_sigma: float = 3.0,

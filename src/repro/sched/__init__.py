@@ -1,0 +1,54 @@
+"""Pure-functional online scheduler API (state-in/state-out).
+
+The paper's Bayesian partitioner re-cast as explicit pytree state plus pure
+transitions — every entry point is jit-compatible, vmappable across tenant
+fleets, and checkpointable through ``repro.checkpoint.CheckpointManager``:
+
+    state = sched.init(config, num_workers, key)
+    state, ll     = sched.observe(state, telemetry, config)
+    fracs, stats  = sched.propose(state, config)
+    state, scores = sched.anomaly(state, telemetry, config)
+
+``Scheduler`` is the thin imperative shell (config + current state) used by
+the trainer/server loops; ``repro.core.HeterogeneityAwarePartitioner`` is the
+deprecated legacy wrapper delegating here.
+"""
+from .objectives import Objective
+from .quantize import quantize_fractions
+from .scheduler import (
+    ProposeStats,
+    Scheduler,
+    SchedulerConfig,
+    SchedulerState,
+    Telemetry,
+    add_workers,
+    anomaly,
+    flag_stragglers,
+    init,
+    num_workers,
+    observe,
+    propose,
+    remove_workers,
+    solve_fractions,
+    unit_params,
+)
+
+__all__ = [
+    "Objective",
+    "ProposeStats",
+    "Scheduler",
+    "SchedulerConfig",
+    "SchedulerState",
+    "Telemetry",
+    "add_workers",
+    "anomaly",
+    "flag_stragglers",
+    "init",
+    "num_workers",
+    "observe",
+    "propose",
+    "quantize_fractions",
+    "remove_workers",
+    "solve_fractions",
+    "unit_params",
+]

@@ -1,0 +1,155 @@
+"""Pluggable partitioning objectives over the completion-time frontier.
+
+The companion paper ("Partitioning Uncertain Workflows") frames the split
+choice as an objective over the (mean, variance) frontier.  One ``Objective``
+value now encodes that choice everywhere — the K-simplex optimizer
+(``sched.solve_fractions``), the two-way frontier sweep
+(``frontier.optimal_two_way_fraction``), microbatch quantization, and the
+serve path — replacing the three divergent encodings (``objective=`` strings,
+``risk_aversion=`` floats, hard-coded ``E + ra*Var``) that used to live in
+``frontier.py`` and ``partitioner.py``.
+
+An ``Objective`` is a frozen, hashable dataclass, so it rides through
+``jax.jit`` as a static argument; scores are pure jnp and differentiable
+(``smooth=True`` swaps hard constraints/indicators for their soft relaxations
+so the simplex optimizer can follow gradients).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Hard-constraint violations are scored BIG + violation instead of inf so that
+# argmin still orders infeasible points (and never returns NaN from inf-inf).
+_BIG = 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """What "best split" means.  Lower score is better.
+
+    kind:
+      "mean"        — E[t]                          (fastest expected)
+      "mean_var"    — E[t] + risk_aversion * Var[t] (risk-sensitive)
+      "var_budget"  — min E[t]  s.t.  Var[t] <= var_budget
+      "deadline"    — max P(t <= deadline)          (QoS quantile target)
+    """
+
+    kind: str = "mean"
+    risk_aversion: float = 0.0
+    var_budget: float = math.inf
+    deadline: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("mean", "mean_var", "var_budget", "deadline"):
+            raise ValueError(f"unknown objective kind {self.kind!r}")
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def mean() -> "Objective":
+        return Objective(kind="mean")
+
+    @staticmethod
+    def mean_var(risk_aversion: float) -> "Objective":
+        return Objective(kind="mean_var", risk_aversion=float(risk_aversion))
+
+    @staticmethod
+    def variance_budget(var_budget: float) -> "Objective":
+        return Objective(kind="var_budget", var_budget=float(var_budget))
+
+    @staticmethod
+    def deadline_quantile(deadline: float) -> "Objective":
+        return Objective(kind="deadline", deadline=float(deadline))
+
+    @staticmethod
+    def from_legacy(
+        objective: str,
+        risk_aversion: float = 0.0,
+        var_budget: float = math.inf,
+        deadline: float = 0.0,
+    ) -> "Objective":
+        """Map the old ``frontier.optimal_two_way_fraction`` string API."""
+        kind = {"constrained": "var_budget"}.get(objective, objective)
+        return Objective(
+            kind=kind,
+            risk_aversion=float(risk_aversion),
+            var_budget=float(var_budget),
+            deadline=float(deadline),
+        )
+
+    # -- scoring -------------------------------------------------------------
+    def score_moments(self, e_t: Array, var: Array, *, smooth: bool = False) -> Array:
+        """Score from completion-time moments alone (broadcasts elementwise).
+
+        Only valid for the moment-based kinds; "deadline" needs the full CDF —
+        use :func:`evaluate` (or :meth:`needs_cdf` to dispatch).
+        """
+        return score_moments_dynamic(
+            self.kind, e_t, var, self.risk_aversion, self.var_budget,
+            smooth=smooth,
+        )
+
+    def needs_cdf(self) -> bool:
+        return self.kind == "deadline"
+
+
+def score_moments_dynamic(
+    kind: str,
+    e_t: Array,
+    var: Array,
+    risk_aversion,
+    var_budget,
+    *,
+    smooth: bool = False,
+) -> Array:
+    """Moment-based scoring with the floats as (possibly traced) values.
+
+    ``Objective.score_moments`` bakes its floats in as jit-static constants —
+    right for the scheduler, whose objective rarely changes.  Callers that
+    sweep the risk/budget parameter (e.g. tracing a tradeoff curve through
+    ``frontier.optimal_two_way_fraction``) use this form so only ``kind``
+    is static and every parameter value reuses one compilation.
+    """
+    if kind == "mean":
+        return e_t
+    if kind == "mean_var":
+        return e_t + risk_aversion * var
+    if kind == "var_budget":
+        excess = var - var_budget
+        if smooth:
+            # softplus barrier keeps the score differentiable; the sharp
+            # scale makes the feasible region's boundary steep.
+            return e_t + jax.nn.softplus(20.0 * excess)
+        return jnp.where(excess <= 0, e_t, _BIG + excess)
+    raise ValueError(f"objective {kind!r} is not moment-based")
+
+
+def evaluate(
+    objective: Objective,
+    fracs: Array,
+    params,
+    *,
+    num_points: int = 512,
+    smooth: bool = False,
+) -> Array:
+    """Score one fraction vector (K,) on the simplex.  Lower is better.
+
+    Pure and differentiable in ``fracs``; ``objective`` must be static under
+    jit.  ``params`` is a ``frontier.UnitParams``.
+    """
+    from repro.core.frontier import completion_cdf, mean_var_completion
+
+    if objective.needs_cdf():
+        p_meet = completion_cdf(
+            jnp.asarray(objective.deadline, fracs.dtype), fracs, params
+        )
+        if smooth:
+            return -jnp.log(jnp.maximum(p_meet, 1e-12))
+        return -p_meet
+    e_t, var = mean_var_completion(fracs, params, num_points)
+    return objective.score_moments(e_t, var, smooth=smooth)

@@ -1,0 +1,441 @@
+"""Pure-functional online Bayesian scheduler (state-in/state-out).
+
+``SchedulerState`` is a pytree (NamedTuple of arrays): the vmapped per-worker
+``GibbsState`` fleet, the EWMA anomaly scores, a step counter, and a PRNG key.
+All transitions are pure —
+
+    init(config, num_workers, key)            -> state
+    observe(state, telemetry, config)         -> (state, ll)
+    propose(state, config)                    -> (fractions, stats)
+    anomaly(state, telemetry, config)         -> (state, scores)
+
+— so they jit, vmap across tenants, and checkpoint through the existing
+``CheckpointManager`` pytree path with no special cases.  Elastic membership
+(``add_workers`` / ``remove_workers``) changes leaf shapes and therefore
+lives outside jit, but is still pure state-in/state-out.
+
+The fraction solver fixes the legacy ``optimize_fractions`` failure mode:
+softmax-logits descent initialized at ``f ∝ 1/mu`` could slide onto a
+degenerate simplex vertex under freshly-chained posteriors (sub-linear
+sampled alphas flatten the objective, and vertices are softmax attractors).
+``solve_fractions`` instead (i) starts from the makespan-equalizing split
+solved by bisection *with the current alpha estimates*, (ii) refines by Adam
+on logits, and (iii) keeps whichever of {equalizing, uniform, refined}
+candidates actually scores best — descent can only improve the proposal,
+never destroy it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gibbs
+from repro.core.frontier import UnitParams, mean_var_completion
+from repro.core.posterior import posterior_predictive_logpdf
+
+from .objectives import Objective, evaluate
+
+Array = jax.Array
+
+
+class Telemetry(NamedTuple):
+    """One batch of per-worker observations: fractions worked, times taken."""
+
+    fracs: Array  # (K, N) workload fraction each worker processed
+    times: Array  # (K, N) measured completion times
+
+
+class SchedulerState(NamedTuple):
+    """Everything the scheduler has learned; a registered pytree.
+
+    Leaves carry a leading worker axis K where per-worker (``gibbs``,
+    ``ewma_ll``) and are scalars otherwise, so a multi-tenant fleet is just
+    one more leading axis added by ``jax.vmap``.
+    """
+
+    gibbs: gibbs.GibbsState  # per-worker posteriors, leaves (K, ...)
+    ewma_ll: Array  # (K,) EWMA of negative predictive log-likelihood
+    ewma_count: Array  # scalar, number of anomaly updates folded in
+    step: Array  # scalar, observe() calls so far
+    key: Array  # scheduler-level PRNG key
+
+
+class ProposeStats(NamedTuple):
+    """Frontier statistics of a proposed split."""
+
+    e_t: Array  # expected makespan at the proposal
+    var: Array  # completion-time variance at the proposal
+    score: Array  # objective score (lower is better)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Static hyperparameters; hashable, passed through jit as static."""
+
+    objective: Objective = Objective()
+    n_iters: int = 20  # Gibbs sweeps per telemetry batch
+    grid_size: int = 256  # exponent-posterior grid resolution
+    discount: float = 0.9  # power-prior forgetting factor
+    mu_guess: float = 1.0  # prior center for per-unit mean time
+    ewma: float = 0.8  # anomaly-score smoothing
+    opt_steps: int = 200  # Adam steps of the simplex refinement
+    opt_lr: float = 0.05
+    num_points: int = 512  # quadrature points for objective evaluation
+    min_fraction: float = 5e-3  # proposal floor per worker (see solve_fractions)
+
+
+# --------------------------------------------------------------------------
+# transitions
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("config", "num_workers"))
+def init(config: SchedulerConfig, num_workers: int, key: Array) -> SchedulerState:
+    """Fresh beliefs for a K-worker fleet."""
+    key, sub = jax.random.split(key)
+    keys = jax.random.split(sub, num_workers)
+    fleet = jax.vmap(
+        lambda k: gibbs.init_state(k, mu_guess=config.mu_guess)
+    )(keys)
+    return SchedulerState(
+        gibbs=fleet,
+        ewma_ll=jnp.zeros((num_workers,), jnp.float32),
+        ewma_count=jnp.zeros((), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def observe(
+    state: SchedulerState,
+    telemetry: Telemetry,
+    config: SchedulerConfig = SchedulerConfig(),
+) -> Tuple[SchedulerState, Array]:
+    """Gibbs-update every worker's posterior from one telemetry batch.
+
+    The power-prior forgetting factor is applied before the batch so the
+    estimator tracks drifting systems.  Returns per-worker log-likelihood.
+    """
+    fleet = jax.vmap(
+        lambda st: gibbs.discount_state(st, config.discount)
+    )(state.gibbs)
+    fleet, ll = jax.vmap(
+        lambda st, t, f: gibbs.gibbs_batch(
+            st, t, f, n_iters=config.n_iters, grid_size=config.grid_size
+        )
+    )(fleet, telemetry.times, telemetry.fracs)
+    return state._replace(gibbs=fleet, step=state.step + 1), ll
+
+
+def unit_params(state: SchedulerState, *, use_samples: bool = False) -> UnitParams:
+    """Current point estimates as frontier parameters.
+
+    By default uses the chained posterior MEANS (Normal-Gamma for (mu, sigma),
+    Beta for the exponents) — the Bayes decision point — rather than the last
+    Gibbs samples.  Samples are the right thing inside the chain, but as
+    partitioning inputs their noise is destructive: one vague-prior draw
+    (mu ~ N(mu0, (1e-3 lam)^-1) before any data) can swing a worker's
+    apparent speed by orders of magnitude and lock the fleet into a
+    pathological split before the estimator ever sees real telemetry.
+    """
+    st = state.gibbs
+    if use_samples:
+        return UnitParams(mu=st.mu, sigma=st.sigma, alpha=st.alpha, beta=st.beta)
+    ng = st.ng
+    lam_mean = ng.nu0 / jnp.maximum(ng.psi0, 1e-30)
+    return UnitParams(
+        mu=ng.mu0,
+        sigma=1.0 / jnp.sqrt(jnp.maximum(lam_mean, 1e-30)),
+        alpha=st.alpha_prior.a / (st.alpha_prior.a + st.alpha_prior.b),
+        beta=st.beta_prior.a / (st.beta_prior.a + st.beta_prior.b),
+    )
+
+
+def _equalizing_fractions(params: UnitParams) -> Array:
+    """Makespan-equalizing split: find tau with sum_k (tau/mu_k)^(1/alpha_k) = 1.
+
+    Solved by bisection in log-space (the sum is monotone in tau); exact for
+    zero variance, and a robust interior starting point otherwise.  Unlike the
+    legacy ``f ∝ 1/mu`` heuristic this respects the scaling exponents, so
+    sub-linear alpha estimates no longer mislead the optimizer.
+    """
+    mu = jnp.maximum(params.mu, 1e-6)
+    alpha = jnp.clip(params.alpha, 0.05, 1.0)
+    log_mu = jnp.log(mu)
+
+    def frac_sum(log_tau):
+        log_f = jnp.clip((log_tau - log_mu) / alpha, -60.0, 0.0)
+        return jnp.sum(jnp.exp(log_f))
+
+    # At tau = max(mu): f_k >= 1 for the slowest unit -> sum >= 1.
+    hi0 = jnp.max(log_mu)
+    lo0 = hi0 - 60.0
+
+    def bisect(carry, _):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        too_big = frac_sum(mid) > 1.0
+        return (jnp.where(too_big, lo, mid), jnp.where(too_big, mid, hi)), None
+
+    (lo, hi), _ = jax.lax.scan(bisect, (lo0, hi0), None, length=50)
+    log_tau = 0.5 * (lo + hi)
+    f = jnp.exp(jnp.clip((log_tau - log_mu) / alpha, -60.0, 0.0))
+    return f / jnp.sum(f)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("objective", "steps", "num_points", "min_fraction")
+)
+def solve_fractions(
+    params: UnitParams,
+    *,
+    objective: Objective = Objective(),
+    steps: int = 200,
+    lr: float = 0.05,
+    num_points: int = 512,
+    min_fraction: float = 5e-3,
+) -> Tuple[Array, ProposeStats]:
+    """Objective-optimal fractions on the K-simplex (see module docstring).
+
+    Proposals are floored at ``min_fraction`` per worker: SPMD quantization
+    gives every live worker at least one microbatch anyway, and telemetry at
+    f -> 0 carries unbounded weight f^(alpha-2beta) in the Normal-Gamma
+    update — one near-zero assignment could poison a worker's posterior
+    (kappa -> 1e9 at a garbage mu) beyond recovery.
+
+    Returns (fractions, ProposeStats).  Jit-compatible; ``objective`` static.
+    """
+    f_eq = _equalizing_fractions(params)
+    k = f_eq.shape[0]
+    f_uni = jnp.full((k,), 1.0 / k, f_eq.dtype)
+
+    def smooth_loss(logits):
+        fracs = jax.nn.softmax(logits)
+        return evaluate(
+            objective, fracs, params, num_points=num_points, smooth=True
+        )
+
+    grad = jax.grad(smooth_loss)
+    logits0 = jnp.log(jnp.maximum(f_eq, 1e-9))
+
+    def adam_step(carry, _):
+        logits, m, v, t = carry
+        g = grad(logits)
+        t = t + 1.0
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1.0 - 0.9**t)
+        vh = v / (1.0 - 0.999**t)
+        logits = logits - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        return (logits, m, v, t), None
+
+    init_carry = (logits0, jnp.zeros((k,)), jnp.zeros((k,)), jnp.asarray(0.0))
+    (logits, _, _, _), _ = jax.lax.scan(adam_step, init_carry, None, length=steps)
+    f_ref = jax.nn.softmax(logits)
+
+    # Safeguard: descent may only improve on the analytic candidates.
+    cands = jnp.stack([f_ref, f_eq, f_uni])  # (3, K)
+    cands = jnp.maximum(cands, min_fraction)
+    cands = cands / jnp.sum(cands, axis=-1, keepdims=True)
+    scores = jax.vmap(
+        lambda f: evaluate(objective, f, params, num_points=num_points)
+    )(cands)
+    best = cands[jnp.argmin(scores)]
+
+    e_t, var = mean_var_completion(best, params, num_points)
+    return best, ProposeStats(e_t=e_t, var=var, score=jnp.min(scores))
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def propose(
+    state: SchedulerState, config: SchedulerConfig = SchedulerConfig()
+) -> Tuple[Array, ProposeStats]:
+    """Objective-optimal fractions under the current beliefs."""
+    return solve_fractions(
+        unit_params(state),
+        objective=config.objective,
+        steps=config.opt_steps,
+        lr=config.opt_lr,
+        num_points=config.num_points,
+        min_fraction=config.min_fraction,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def anomaly(
+    state: SchedulerState,
+    telemetry: Telemetry,
+    config: SchedulerConfig = SchedulerConfig(),
+) -> Tuple[SchedulerState, Array]:
+    """EWMA'd negative posterior-predictive log-likelihood per worker.
+
+    High score == recent behaviour inconsistent with the learned model.
+    Accepts (K,) single observations or (K, N) batches (averaged over N).
+    """
+    p = unit_params(state)
+    lam_mean = 1.0 / jnp.maximum(p.sigma * p.sigma, 1e-30)
+    t = jnp.asarray(telemetry.times)
+    f = jnp.asarray(telemetry.fracs)
+    ll = jax.vmap(posterior_predictive_logpdf)(
+        t, f, p.mu, lam_mean, p.alpha, p.beta
+    )
+    if ll.ndim > 1:
+        ll = jnp.mean(ll, axis=-1)
+    score = -ll
+    fresh = state.ewma_count == 0
+    new_ewma = jnp.where(
+        fresh, score, config.ewma * state.ewma_ll + (1.0 - config.ewma) * score
+    )
+    state = state._replace(ewma_ll=new_ewma, ewma_count=state.ewma_count + 1)
+    return state, new_ewma
+
+
+@jax.jit
+def flag_stragglers(scores: Array, threshold_sigma: float = 3.0) -> Array:
+    """Workers whose anomaly score is a robust outlier vs the fleet."""
+    med = jnp.median(scores)
+    mad = jnp.median(jnp.abs(scores - med)) + 1e-9
+    return scores > med + threshold_sigma * 1.4826 * mad
+
+
+# --------------------------------------------------------------------------
+# elastic membership (shape-changing: pure but not jittable)
+# --------------------------------------------------------------------------
+def num_workers(state: SchedulerState) -> int:
+    return int(state.ewma_ll.shape[0])
+
+
+def remove_workers(state: SchedulerState, dead: np.ndarray) -> SchedulerState:
+    """Drop failed workers from the fleet (elastic down-scale)."""
+    keep = np.flatnonzero(~np.asarray(dead, bool))
+    take = lambda x: jnp.take(x, keep, axis=0)
+    return state._replace(
+        gibbs=jax.tree_util.tree_map(take, state.gibbs),
+        ewma_ll=take(state.ewma_ll),
+    )
+
+
+def add_workers(
+    state: SchedulerState,
+    count: int,
+    config: SchedulerConfig = SchedulerConfig(),
+    *,
+    key: Optional[Array] = None,
+    mu_guess: Optional[float] = None,
+) -> SchedulerState:
+    """Admit new workers with fresh priors (elastic up-scale).
+
+    The new workers' prior draws come from the scheduler's own PRNG stream
+    unless an explicit ``key`` is supplied; ``mu_guess`` overrides the
+    config's prior center (e.g. seeding admits at the fleet's known speed).
+    """
+    if key is None:
+        key, sub = jax.random.split(state.key)
+    else:
+        key, sub = state.key, key
+    keys = jax.random.split(sub, count)
+    guess = config.mu_guess if mu_guess is None else mu_guess
+    fresh = jax.vmap(lambda k: gibbs.init_state(k, mu_guess=guess))(keys)
+    cat = lambda a, b: jnp.concatenate([jnp.asarray(a), b], axis=0)
+    return state._replace(
+        gibbs=jax.tree_util.tree_map(cat, state.gibbs, fresh),
+        ewma_ll=jnp.concatenate([jnp.asarray(state.ewma_ll), jnp.zeros(count)]),
+        key=key,
+    )
+
+
+# --------------------------------------------------------------------------
+# imperative shell
+# --------------------------------------------------------------------------
+class Scheduler:
+    """Thin imperative shell: config + current ``SchedulerState``.
+
+    All logic lives in the pure functions above; this class only threads the
+    state for callers structured as loops (trainer, server, monitor).  The
+    ``state`` attribute is the checkpointable pytree — hand it to
+    ``CheckpointManager.save`` and assign it back after ``restore``.
+    """
+
+    def __init__(
+        self,
+        num_workers: int,
+        *,
+        config: Optional[SchedulerConfig] = None,
+        seed: int = 0,
+        **overrides,
+    ):
+        config = config or SchedulerConfig()
+        if overrides:
+            config = dataclasses.replace(config, **overrides)
+        self.config = config
+        self.state = init(config, num_workers, jax.random.PRNGKey(seed))
+
+    @property
+    def num_workers(self) -> int:
+        return num_workers(self.state)
+
+    @property
+    def objective(self) -> Objective:
+        return self.config.objective
+
+    @objective.setter
+    def objective(self, obj: Objective) -> None:
+        self.config = dataclasses.replace(self.config, objective=obj)
+
+    # -- estimation --------------------------------------------------------
+    def observe(self, telemetry: Telemetry) -> Array:
+        self.state, ll = observe(self.state, telemetry, self.config)
+        return ll
+
+    def unit_params(self) -> UnitParams:
+        return unit_params(self.state)
+
+    # -- partitioning ------------------------------------------------------
+    def propose_fractions(self) -> Tuple[np.ndarray, float, float]:
+        fracs, stats = propose(self.state, self.config)
+        return np.asarray(fracs), float(stats.e_t), float(stats.var)
+
+    def propose_microbatches(
+        self, total_microbatches: int, min_per_worker: int = 1
+    ) -> np.ndarray:
+        from .quantize import quantize_fractions
+
+        fracs, _ = propose(self.state, self.config)
+        return quantize_fractions(
+            np.asarray(fracs),
+            total_microbatches,
+            self.unit_params(),
+            objective=self.config.objective,
+            min_per_worker=min_per_worker,
+        )
+
+    # -- anomaly / straggler detection -------------------------------------
+    def anomaly_scores(self, fracs, times) -> np.ndarray:
+        self.state, scores = anomaly(
+            self.state,
+            Telemetry(fracs=jnp.asarray(fracs), times=jnp.asarray(times)),
+            self.config,
+        )
+        return np.asarray(scores, np.float64)
+
+    def flag_stragglers(self, threshold_sigma: float = 3.0) -> np.ndarray:
+        return np.asarray(flag_stragglers(self.state.ewma_ll, threshold_sigma))
+
+    # -- elastic membership ------------------------------------------------
+    def remove_workers(self, dead: np.ndarray) -> None:
+        self.state = remove_workers(self.state, dead)
+
+    def add_workers(
+        self,
+        count: int,
+        seed: Optional[int] = None,
+        mu_guess: Optional[float] = None,
+    ) -> None:
+        key = None if seed is None else jax.random.PRNGKey(seed)
+        self.state = add_workers(
+            self.state, count, self.config, key=key, mu_guess=mu_guess
+        )

@@ -23,10 +23,7 @@ import numpy as np
 
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig, RunConfig
-from repro.core.partitioner import (
-    HeterogeneityAwarePartitioner,
-    WorkerTelemetry,
-)
+from repro.sched import Objective, Scheduler, SchedulerConfig, Telemetry
 from repro.data.pipeline import DataIterator
 from repro.distributed.compression import make_compressor
 from repro.distributed.fault_tolerance import FaultToleranceMonitor
@@ -95,11 +92,14 @@ class Trainer:
         self._mb_weights = np.ones(self.m, np.float32)
         self._worker_of_mb = None
         if run.partitioner_enabled and cluster is not None:
-            self.partitioner = HeterogeneityAwarePartitioner(
+            ra = run.partitioner_risk_aversion
+            self.partitioner = Scheduler(
                 cluster.num_workers,
-                risk_aversion=run.partitioner_risk_aversion,
+                config=SchedulerConfig(
+                    objective=Objective.mean_var(ra) if ra else Objective.mean(),
+                    mu_guess=1.0,
+                ),
                 seed=run.seed,
-                mu_guess=1.0,
             )
             self.monitor = FaultToleranceMonitor(
                 self.partitioner,
@@ -129,13 +129,35 @@ class Trainer:
         return counts / counts.sum()
 
     # ------------------------------------------------------------------ resume
+    def _ckpt_tree(self) -> Any:
+        """Everything checkpointed as one pytree; the scheduler's beliefs are
+        part of it, so a restart no longer forgets what the estimator learned."""
+        tree = {"params": self.params, "opt_state": self.opt_state}
+        if self.partitioner is not None:
+            tree["sched"] = self.partitioner.state
+        return tree
+
     def try_restore(self) -> bool:
         latest = self.ckpt.latest_step()
         if latest is None:
             return False
-        (self.params, self.opt_state), extra = self.ckpt.restore(
-            (self.params, self.opt_state)
-        )
+        try:
+            restored, extra = self.ckpt.restore(self._ckpt_tree())
+        except ValueError:
+            # Checkpoint written with a different scheduler configuration
+            # (legacy, partitioner toggled, ...): model state is still good.
+            restored, extra = self.ckpt.restore(
+                {"params": self.params, "opt_state": self.opt_state}
+            )
+        self.params = restored["params"]
+        self.opt_state = restored["opt_state"]
+        sched_state = restored.get("sched")
+        if self.partitioner is not None and sched_state is not None:
+            # Adopt saved beliefs only if the fleet shape still matches
+            # (an eviction between save and restart invalidates them).
+            if len(sched_state.ewma_ll) == self.partitioner.num_workers:
+                self.partitioner.state = sched_state
+                self._assign_microbatches(equal=False)
         self.step = int(extra["step"])
         self.data.load_state_dict(extra["data_state"])
         return True
@@ -143,7 +165,7 @@ class Trainer:
     def save(self) -> None:
         self.ckpt.save(
             self.step,
-            (self.params, self.opt_state),
+            self._ckpt_tree(),
             {"step": self.step, "data_state": self.data.state_dict()},
         )
 
@@ -196,7 +218,7 @@ class Trainer:
                     f = np.stack(self._telemetry_f, axis=1)  # (K, N)
                     t = np.stack(self._telemetry_t, axis=1)
                     self.partitioner.observe(
-                        WorkerTelemetry(jnp.asarray(f), jnp.asarray(t))
+                        Telemetry(jnp.asarray(f), jnp.asarray(t))
                     )
                     counts = self._assign_microbatches(equal=False)
                     splits.append(counts.copy())

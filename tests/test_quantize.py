@@ -1,0 +1,97 @@
+"""Invariants of microbatch quantization, incl. adversarial fraction vectors
+and the batched on-device refinement."""
+import numpy as np
+import pytest
+
+from repro import sched
+from repro.core.frontier import UnitParams, mean_var_completion
+
+
+def _check_invariants(counts, total, min_per_worker=1):
+    assert counts.sum() == total
+    assert (counts >= min_per_worker).all()
+
+
+def test_counts_sum_and_floor():
+    counts = sched.quantize_fractions(np.array([0.61, 0.29, 0.10]), 16)
+    _check_invariants(counts, 16)
+    assert counts[0] > counts[1] > counts[2]
+
+
+def test_min_per_worker_respected():
+    fr = np.array([0.97, 0.01, 0.01, 0.01])
+    counts = sched.quantize_fractions(fr, 12, min_per_worker=2)
+    _check_invariants(counts, 12, min_per_worker=2)
+
+
+def test_k_near_total_terminates():
+    """K workers, total barely above K*min: the over-allocation shed loop
+    must terminate and land exactly on the total."""
+    k = 16
+    fr = np.full(k, 1.0 / k)
+    counts = sched.quantize_fractions(fr, k, min_per_worker=1)
+    _check_invariants(counts, k)
+    assert (counts == 1).all()
+
+    counts = sched.quantize_fractions(fr, k + 1, min_per_worker=1)
+    _check_invariants(counts, k + 1)
+
+
+def test_near_zero_fractions_terminate():
+    """Degenerate simplex corners: min_per_worker floors force shedding from
+    the dominant worker without infinite-looping."""
+    k = 8
+    fr = np.zeros(k)
+    fr[0] = 1.0  # everything on one worker
+    counts = sched.quantize_fractions(fr, 10, min_per_worker=1)
+    _check_invariants(counts, 10)
+    assert counts[0] == 10 - (k - 1)
+
+    fr = np.full(k, 1e-12)
+    fr[3] = 1.0 - 7e-12
+    counts = sched.quantize_fractions(fr, k, min_per_worker=1)
+    _check_invariants(counts, k)
+
+
+def test_random_adversarial_vectors():
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        k = int(rng.integers(2, 12))
+        total = int(rng.integers(k, 4 * k))
+        # spiky dirichlet: most mass on few workers
+        fr = rng.dirichlet(np.full(k, 0.05))
+        counts = sched.quantize_fractions(fr, total)
+        _check_invariants(counts, total)
+
+
+def test_total_too_small_raises():
+    with pytest.raises(ValueError):
+        sched.quantize_fractions(np.array([0.5, 0.5]), 3, min_per_worker=2)
+
+
+def test_batched_refinement_improves_objective():
+    p = UnitParams.of([10.0, 20.0, 40.0], [1.0, 2.0, 4.0])
+    fracs, _ = sched.solve_fractions(p)
+    counts = sched.quantize_fractions(np.asarray(fracs), 8, p)
+    _check_invariants(counts, 8)
+    naive = np.array([3, 3, 2])
+
+    def obj(c):
+        import jax.numpy as jnp
+
+        e, _ = mean_var_completion(jnp.asarray(c / 8.0, jnp.float32), p)
+        return float(e)
+
+    assert obj(counts) <= obj(naive) + 1e-6
+
+
+def test_refinement_preserves_invariants():
+    rng = np.random.default_rng(1)
+    k = 6
+    p = UnitParams.of(list(rng.uniform(5, 40, k)), list(rng.uniform(0.5, 3, k)))
+    fr = rng.dirichlet(np.full(k, 0.2))
+    for total, minw in ((k, 1), (13, 1), (24, 2)):
+        counts = sched.quantize_fractions(
+            fr, total, p, min_per_worker=minw
+        )
+        _check_invariants(counts, total, min_per_worker=minw)

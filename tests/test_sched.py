@@ -1,0 +1,199 @@
+"""The pure-functional scheduler API: pytree state, pure transitions,
+jit/vmap compatibility, and checkpoint round-trips."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sched
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.core.frontier import UnitParams
+
+
+CFG = sched.SchedulerConfig(n_iters=8, grid_size=64, mu_guess=10.0, opt_steps=60)
+
+
+def _telemetry(rng, state, true_mu, n=16, alpha=0.9):
+    k = len(true_mu)
+    fr = np.asarray(sched.propose(state, CFG)[0])
+    fmat = np.tile(fr[:, None], (1, n))
+    tmat = np.stack([
+        np.maximum(f[0] ** alpha * m + 0.3 * rng.normal(size=n), 1e-3)
+        for f, m in zip(fmat, true_mu)
+    ])
+    return sched.Telemetry(jnp.asarray(fmat), jnp.asarray(tmat))
+
+
+def test_state_is_pytree_of_arrays():
+    state = sched.init(CFG, 3, jax.random.PRNGKey(0))
+    leaves = jax.tree_util.tree_leaves(state)
+    assert leaves and all(hasattr(l, "shape") for l in leaves)
+    # per-worker leaves carry the K axis
+    assert state.ewma_ll.shape == (3,)
+    assert state.gibbs.mu.shape == (3,)
+
+
+def test_jitted_observe_propose_roundtrip():
+    """observe ∘ propose composes under one jax.jit."""
+    state = sched.init(CFG, 2, jax.random.PRNGKey(0))
+    telem = _telemetry(np.random.default_rng(0), state, [5.0, 20.0])
+
+    @jax.jit
+    def step(state, telem):
+        state, ll = sched.observe(state, telem, CFG)
+        fracs, stats = sched.propose(state, CFG)
+        return state, ll, fracs, stats
+
+    state2, ll, fracs, stats = step(state, telem)
+    assert int(state2.step) == 1
+    assert ll.shape == (2,) and np.isfinite(np.asarray(ll)).all()
+    np.testing.assert_allclose(float(jnp.sum(fracs)), 1.0, atol=1e-5)
+    assert float(stats.e_t) > 0
+
+
+def test_online_learning_rebalances_functional():
+    """The ISSUE's acceptance scenario through the pure API: a 4x-faster
+    worker ends up with the bulk of the work."""
+    rng = np.random.default_rng(0)
+    state = sched.init(CFG, 2, jax.random.PRNGKey(0))
+    for _ in range(6):
+        state, _ = sched.observe(
+            state, _telemetry(rng, state, [5.0, 20.0], n=32), CFG
+        )
+    fracs, _ = sched.propose(state, CFG)
+    assert float(fracs[0]) > 0.6
+
+
+def test_checkpoint_roundtrip_bit_exact(tmp_path):
+    rng = np.random.default_rng(1)
+    state = sched.init(CFG, 3, jax.random.PRNGKey(7))
+    for _ in range(2):
+        state, _ = sched.observe(
+            state, _telemetry(rng, state, [4.0, 8.0, 16.0]), CFG
+        )
+
+    ckpt = CheckpointManager(str(tmp_path), async_write=False)
+    ckpt.save(0, state)
+    fresh = sched.init(CFG, 3, jax.random.PRNGKey(0))  # structure template
+    restored, _ = ckpt.restore(fresh)
+
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restored_trajectory_matches_unrestored(tmp_path):
+    """observe -> propose after restore reproduces the unrestored run."""
+    rng = np.random.default_rng(2)
+    state = sched.init(CFG, 2, jax.random.PRNGKey(3))
+    state, _ = sched.observe(state, _telemetry(rng, state, [5.0, 20.0]), CFG)
+
+    ckpt = CheckpointManager(str(tmp_path), async_write=False)
+    ckpt.save(0, state)
+    restored, _ = ckpt.restore(sched.init(CFG, 2, jax.random.PRNGKey(0)))
+
+    telem = _telemetry(rng, state, [5.0, 20.0])
+    s1, ll1 = sched.observe(state, telem, CFG)
+    s2, ll2 = sched.observe(restored, telem, CFG)
+    np.testing.assert_array_equal(np.asarray(ll1), np.asarray(ll2))
+    f1, _ = sched.propose(s1, CFG)
+    f2, _ = sched.propose(s2, CFG)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+
+def test_vmap_multi_tenant_fleet():
+    """One device program schedules several tenants at once."""
+    tenants, k = 3, 2
+    keys = jax.random.split(jax.random.PRNGKey(0), tenants)
+    states = jax.vmap(lambda key: sched.init(CFG, k, key))(keys)
+    assert states.gibbs.mu.shape == (tenants, k)
+
+    rng = np.random.default_rng(0)
+    fr = np.full((tenants, k, 8), 0.5, np.float32)
+    t = np.abs(rng.normal(5.0, 0.5, (tenants, k, 8))).astype(np.float32)
+    states, ll = jax.vmap(
+        lambda s, tt, ff: sched.observe(s, sched.Telemetry(ff, tt), CFG)
+    )(states, jnp.asarray(t), jnp.asarray(fr))
+    assert ll.shape == (tenants, k)
+
+    fracs, stats = jax.vmap(lambda s: sched.propose(s, CFG))(states)
+    assert fracs.shape == (tenants, k)
+    np.testing.assert_allclose(np.asarray(fracs).sum(axis=-1), 1.0, atol=1e-5)
+    assert np.isfinite(np.asarray(stats.e_t)).all()
+
+
+def test_anomaly_flags_degraded_worker():
+    rng = np.random.default_rng(3)
+    state = sched.init(CFG, 4, jax.random.PRNGKey(1))
+    for _ in range(3):
+        fr = np.full((4, 16), 0.25, np.float32)
+        t = np.abs(rng.normal(5.0, 0.3, (4, 16))).astype(np.float32)
+        state, _ = sched.observe(
+            state, sched.Telemetry(jnp.asarray(fr), jnp.asarray(t)), CFG
+        )
+    # worker 2 suddenly runs 6x slower than its learned model
+    for _ in range(4):
+        times = np.abs(rng.normal(5.0, 0.3, 4))
+        times[2] *= 6.0
+        state, scores = sched.anomaly(
+            state,
+            sched.Telemetry(jnp.full(4, 0.25), jnp.asarray(times)),
+            CFG,
+        )
+    scores = np.asarray(scores)
+    assert scores[2] == scores.max()
+    assert bool(np.asarray(sched.flag_stragglers(state.ewma_ll, 2.0))[2])
+
+
+def test_elastic_membership_pure():
+    state = sched.init(CFG, 4, jax.random.PRNGKey(0))
+    state = sched.remove_workers(state, np.array([False, True, False, False]))
+    assert sched.num_workers(state) == 3
+    assert state.gibbs.mu.shape == (3,)
+    state = sched.add_workers(state, 2, CFG)
+    assert sched.num_workers(state) == 5
+    fracs, _ = sched.propose(state, CFG)
+    assert fracs.shape == (5,)
+    np.testing.assert_allclose(float(jnp.sum(fracs)), 1.0, atol=1e-5)
+
+
+def test_objective_plumbing():
+    """One Objective value drives the simplex solver consistently."""
+    p = UnitParams.of([30.0, 20.0], [2.0, 6.0])
+    f_m, st_m = sched.solve_fractions(p, objective=sched.Objective.mean())
+    f_r, st_r = sched.solve_fractions(
+        p, objective=sched.Objective.mean_var(2.0)
+    )
+    assert float(st_r.var) <= float(st_m.var) + 1e-6
+    assert float(st_r.e_t) >= float(st_m.e_t) - 1e-6
+
+    budget = float(st_m.var) * 0.5
+    f_b, st_b = sched.solve_fractions(
+        p, objective=sched.Objective.variance_budget(budget)
+    )
+    assert float(st_b.var) <= budget + 1e-4
+
+    f_d, st_d = sched.solve_fractions(
+        p, objective=sched.Objective.deadline_quantile(1.2 * float(st_m.e_t))
+    )
+    p_meet = -float(st_d.score)
+    assert 0.0 <= p_meet <= 1.0 + 1e-6
+    np.testing.assert_allclose(float(jnp.sum(f_d)), 1.0, atol=1e-5)
+
+
+def test_scheduler_shell_delegates():
+    """The imperative shell is a view over the pure core."""
+    sh = sched.Scheduler(2, config=CFG, seed=0)
+    rng = np.random.default_rng(0)
+    telem = _telemetry(rng, sh.state, [5.0, 20.0])
+    sh.observe(telem)
+    assert int(sh.state.step) == 1
+    fr, e_t, var = sh.propose_fractions()
+    np.testing.assert_allclose(fr.sum(), 1.0, atol=1e-5)
+    counts = sh.propose_microbatches(8)
+    assert counts.sum() == 8
+    # swapping the objective never touches the beliefs
+    step_before = int(sh.state.step)
+    sh.objective = sched.Objective.mean_var(3.0)
+    assert int(sh.state.step) == step_before
