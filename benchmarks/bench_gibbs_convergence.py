@@ -1,16 +1,105 @@
 """Paper Fig 5: log-likelihood vs number of observations (network file
 transfer analogue -> simulated cluster telemetry), plus Gibbs throughput
-(single unit and a vmapped 64-worker fleet)."""
+(single unit and a fleet), plus the fleet-scale estimation-engine case
+(``fleet_main``, part of the CI smoke suite): the legacy PR-2 engine —
+per-worker vmap of a sweep that evaluates each exponent's grid posterior in
+its own direct-form pass — against the fused fleet engine, whose sweeps
+evaluate every worker and both exponents from one shared pow table."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, time_pair_min
 from repro import sched
 from repro.core import gibbs
-from repro.core.posterior import log_likelihood
+from repro.core.distributions import sample_beta, sample_gamma, sample_normal
+from repro.core.moments import (
+    exponent_grid,
+    fit_beta_method_of_moments,
+    moments_from_log_density,
+)
+from repro.core.posterior import log_likelihood, update_normal_gamma
+
+
+def _legacy_gibbs_batch(state, t, f, *, n_iters: int, grid_size: int):
+    """Faithful PR-2 single-unit Gibbs batch (the fused engine's "before").
+
+    Each sweep runs TWO independent direct-form (G, N) grid evaluations —
+    alpha then beta, each building its own exp table — exactly as the legacy
+    production path did; fleets were handled by vmapping this whole function
+    per worker.
+    """
+    from benchmarks.bench_kernels import _legacy_alpha, _legacy_beta
+
+    grid = exponent_grid(grid_size)
+
+    def sweep(carry, _):
+        st = carry
+        key, k_l, k_m, k_a, k_b = jax.random.split(st.key, 5)
+        ng_post = update_normal_gamma(st.ng, t, f, st.alpha, st.beta)
+        lam = sample_gamma(k_l, ng_post.nu0, ng_post.psi0)
+        mu = sample_normal(
+            k_m, ng_post.mu0, 1.0 / jnp.sqrt(jnp.maximum(ng_post.kappa0 * lam, 1e-30))
+        )
+        logp_a = _legacy_alpha(
+            grid, t, f, mu, lam, st.beta, st.alpha_prior.a, st.alpha_prior.b
+        )
+        logp_b = _legacy_beta(
+            grid, t, f, mu, lam, st.alpha, st.beta_prior.a, st.beta_prior.b
+        )
+        ea, va = moments_from_log_density(grid, logp_a)
+        eb, vb = moments_from_log_density(grid, logp_b)
+        a_post = fit_beta_method_of_moments(ea, va)
+        b_post = fit_beta_method_of_moments(eb, vb)
+        alpha = sample_beta(k_a, a_post.a, a_post.b)
+        beta = sample_beta(k_b, b_post.a, b_post.b)
+        new_st = gibbs.GibbsState(
+            st.ng, st.alpha_prior, st.beta_prior, mu, lam, alpha, beta, key
+        )
+        return new_st, None
+
+    state, _ = jax.lax.scan(sweep, state, None, length=n_iters)
+    return state
+
+
+def fleet_main() -> None:
+    """Fleet-scale engine throughput: legacy vmapped engine vs fused engine."""
+    from benchmarks.bench_kernels import _fleet_problem
+
+    k, g, n, iters = 16, 512, 4096, 2
+    _, t, f, *_ = _fleet_problem(k, g, n)  # same problem as the kernel bench
+    cells = 2 * k * g * n * iters  # grid-posterior cells per engine call
+
+    keys = jax.random.split(jax.random.PRNGKey(1), k)
+    states = jax.vmap(lambda kk: gibbs.init_state(kk, mu_guess=25.0))(keys)
+
+    # Both sides jit with operands passed per call; interleaved min-time A/B
+    # (see benchmarks.common.time_pair_min) keeps the ratio honest on noisy
+    # shared machines.
+    legacy = jax.jit(
+        jax.vmap(
+            lambda st, tt, ff: _legacy_gibbs_batch(
+                st, tt, ff, n_iters=iters, grid_size=g
+            )
+        )
+    )
+    fused = jax.jit(
+        lambda st, tt, ff: gibbs.gibbs_batch(st, tt, ff, n_iters=iters, grid_size=g)[0]
+    )
+    us_ref, us_fused = time_pair_min(
+        lambda: legacy(states, t, f), lambda: fused(states, t, f), rounds=5
+    )
+    emit(
+        f"gibbs_fleet_engine_ref_k{k}_g{g}_n{n}_it{iters}", us_ref,
+        f"{cells / (us_ref * 1e-6) / 1e9:.2f} Gcell/s legacy vmap engine",
+    )
+    emit(
+        f"gibbs_fleet_engine_fused_k{k}_g{g}_n{n}_it{iters}", us_fused,
+        f"{cells / (us_fused * 1e-6) / 1e9:.2f} Gcell/s "
+        f"{us_ref / us_fused:.2f}x vs ref",
+    )
 
 
 def main() -> None:
@@ -71,6 +160,8 @@ def main() -> None:
     us_obs = time_fn(obs_fn, iters=3)
     emit("sched_observe_64workers", us_obs,
          f"per-worker={us_obs/k:.1f}us (jitted SchedulerState transition)")
+
+    fleet_main()
 
 
 if __name__ == "__main__":

@@ -4,6 +4,13 @@ On this CPU container the Pallas kernels execute in interpret mode (they are
 TPU kernels); the meaningful CPU numbers are the XLA-compiled reference
 paths, reported alongside interpret-mode verification deltas.  On TPU the
 same ops.py entry points dispatch to the Mosaic kernels.
+
+``fleet_main`` is the fleet-scale estimation-engine case (part of the CI
+smoke suite): the legacy PR-2 production path — per-worker vmap of two
+single-mode direct-form grid oracles, recomputing the pow table per
+exponent — against the fused engine, which evaluates every worker and both
+exponents from one shared pow table (one Pallas launch on TPU; the
+cache-blocked unified oracle on CPU).
 """
 from __future__ import annotations
 
@@ -11,9 +18,112 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
-from repro.core.moments import BetaParams, exponent_grid
+from benchmarks.common import emit, time_fn, time_pair_min
+from repro.core.moments import (
+    BetaParams,
+    exponent_grid,
+    log_posterior_alpha_ref,
+    log_posterior_grid,
+)
 from repro.kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Faithful copy of the PR-2 reference path (the "before" of the fused-engine
+# refactor): one direct-form (G, N) evaluation PER exponent, each building
+# its own exp table.  Kept here so the speedup baseline stays measurable
+# after the production code collapsed onto the unified oracle.
+# --------------------------------------------------------------------------
+def _legacy_alpha(grid, t, f, mu, lam, beta, pa, pb):
+    f = jnp.maximum(f, 1e-6)
+    logf = jnp.log(f)
+    mean = jnp.exp(grid[:, None] * logf[None, :]) * mu
+    z = (t[None, :] - mean) * jnp.exp(-beta * logf)[None, :]
+    quad = -0.5 * lam * jnp.sum(z * z, axis=-1)
+    g = jnp.clip(grid, 1e-6, 1.0 - 1e-6)
+    return quad + (pa - 1.0) * jnp.log(g) + (pb - 1.0) * jnp.log1p(-g)
+
+
+def _legacy_beta(grid, t, f, mu, lam, alpha, pa, pb):
+    f = jnp.maximum(f, 1e-6)
+    logf = jnp.log(f)
+    resid = t - jnp.exp(alpha * logf) * mu
+    z = resid[None, :] * jnp.exp(-grid[:, None] * logf[None, :])
+    quad = -0.5 * lam * jnp.sum(z * z, axis=-1) - grid * jnp.sum(logf)
+    g = jnp.clip(grid, 1e-6, 1.0 - 1e-6)
+    return quad + (pa - 1.0) * jnp.log(g) + (pb - 1.0) * jnp.log1p(-g)
+
+
+def _fleet_problem(k: int, g: int, n: int):
+    key = jax.random.PRNGKey(0)
+    kf, kt = jax.random.split(key)
+    f = jax.random.uniform(kf, (k, n), minval=0.05, maxval=0.95)
+    t = f**0.9 * 25.0 + f**0.7 * 2.0 * jax.random.normal(kt, (k, n))
+    grid = exponent_grid(g)
+    ones = jnp.ones((k,), jnp.float32)
+    return (
+        grid, t, f,
+        25.0 * ones, 0.25 * ones, 0.9 * ones, 0.7 * ones,
+        BetaParams(2.0 * ones, 2.0 * ones), BetaParams(2.0 * ones, 2.0 * ones),
+    )
+
+
+def fleet_main() -> None:
+    """Fleet-scale grid-posterior throughput: legacy ref path vs fused engine."""
+    k, g, n = 16, 512, 4096
+    grid, t, f, mu, lam, alpha, beta, ap, bp = _fleet_problem(k, g, n)
+    cells = 2 * k * g * n  # both exponents, every (worker, grid, obs) cell
+
+    # Both sides jit with operands passed per call (no constant folding), and
+    # the ratio comes from an interleaved min-time A/B so a noisy-neighbor
+    # machine degrades both sides equally.
+    legacy = jax.jit(
+        jax.vmap(
+            lambda tt, ff, m, l, a, b: (
+                _legacy_alpha(grid, tt, ff, m, l, b, 2.0, 2.0),
+                _legacy_beta(grid, tt, ff, m, l, a, 2.0, 2.0),
+            )
+        )
+    )
+    fused = jax.jit(
+        lambda tt, ff: log_posterior_grid(
+            grid, tt, ff, mu, lam, alpha, beta, ap, bp, symmetric_grid=True
+        )
+    )
+    us_ref, us_fused = time_pair_min(
+        lambda: legacy(t, f, mu, lam, alpha, beta), lambda: fused(t, f)
+    )
+    emit(
+        f"posterior_grid_fleet_ref_k{k}_g{g}_n{n}", us_ref,
+        f"{cells / (us_ref * 1e-6) / 1e9:.2f} Gcell/s legacy two-pass vmap",
+    )
+    emit(
+        f"posterior_grid_fleet_fused_k{k}_g{g}_n{n}", us_fused,
+        f"{cells / (us_fused * 1e-6) / 1e9:.2f} Gcell/s "
+        f"{us_ref / us_fused:.2f}x vs ref",
+    )
+
+    # Pallas fleet kernel: one launch for all K workers and both exponents.
+    # On CPU this is interpret-mode emulation (honest but not the production
+    # number — on TPU the same call lowers to one Mosaic kernel).
+    from repro.kernels.posterior_grid import posterior_grid_fleet_pallas
+
+    mask = jnp.ones_like(t)
+    pallas_fn = lambda tt, ff: posterior_grid_fleet_pallas(
+        grid, tt, ff, mask, mu, lam, alpha, beta, ap.a, ap.b, bp.a, bp.b,
+        interpret=True,
+    )
+    us_pal = time_fn(pallas_fn, t, f, warmup=1, iters=3)
+    out_pal = pallas_fn(t, f)
+    want = fused(t, f)
+    err = float(
+        jnp.max(jnp.abs(out_pal - want)) / (1.0 + jnp.max(jnp.abs(want)))
+    )
+    emit(
+        f"posterior_grid_fleet_pallas_interp_k{k}_g{g}_n{n}", us_pal,
+        f"{cells / (us_pal * 1e-6) / 1e9:.2f} Gcell/s interpret-mode "
+        f"max_rel_err={err:.2e}",
+    )
 
 
 def main() -> None:
@@ -28,9 +138,9 @@ def main() -> None:
     prior = BetaParams(jnp.float32(2.0), jnp.float32(2.0))
 
     fn = jax.jit(
-        lambda tt, ff: ref.posterior_grid_ref(
+        lambda tt, ff: log_posterior_alpha_ref(
             grid, tt, ff, jnp.float32(25.0), jnp.float32(0.25),
-            jnp.float32(0.7), prior.a, prior.b, None, mode="alpha",
+            jnp.float32(0.7), prior,
         )
     )
     us = time_fn(fn, t, f)
@@ -48,6 +158,8 @@ def main() -> None:
         "posterior_grid_pallas_verify", 0.0,
         f"interpret-mode max_rel_err={float(jnp.max(jnp.abs(out_i - want)) / (1 + jnp.max(jnp.abs(want)))):.2e}",
     )
+
+    fleet_main()
 
     # decode attention: 32k cache, GQA 32q/4kv heads
     b, h, kvh, d, s = 4, 32, 4, 128, 32768

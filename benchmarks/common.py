@@ -1,8 +1,12 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission + JSON row capture."""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict, List
+
+# Every ``emit`` appends here so ``benchmarks.run --json`` can persist the
+# full run (the CI perf-trajectory artifact) without re-parsing stdout.
+ROWS: List[Dict[str, object]] = []
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -22,5 +26,30 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def time_pair_min(fn_a: Callable, fn_b: Callable, rounds: int = 8) -> tuple:
+    """Interleaved min-time A/B comparison in microseconds.
+
+    For head-to-head throughput ratios on shared machines: alternating the
+    two sides inside each round exposes both to the same noisy-neighbor
+    conditions, and the per-side minimum keeps the least-interfered sample.
+    The thunks must call through an argument-passing jit boundary so neither
+    side gets constant-folding advantages.
+    """
+    import jax
+
+    jax.block_until_ready(fn_a())
+    jax.block_until_ready(fn_b())
+    best_a = best_b = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a * 1e6, best_b * 1e6
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1), "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

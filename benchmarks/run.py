@@ -1,11 +1,16 @@
 """Benchmark harness: one module per paper table/figure + system benches.
 
 Emits ``name,us_per_call,derived`` CSV rows.  ``python -m benchmarks.run``;
-``--smoke`` runs the fast CI subset (frontier sweep + partitioner quality)
-so a CPU-only runner finishes in minutes.
+``--smoke`` runs the fast CI subset (frontier sweep + partitioner quality +
+the fleet-scale estimation-engine cases) so a CPU-only runner finishes in
+minutes; ``--json PATH`` additionally persists every emitted row (plus the
+suite name and failures) as a JSON artifact — CI uploads the smoke run as
+``BENCH_<pr>.json`` so the perf trajectory accumulates across PRs.
 """
 from __future__ import annotations
 
+import json
+import platform
 import sys
 import traceback
 
@@ -16,6 +21,7 @@ from benchmarks import (
     bench_partitioner,
     bench_posterior_approx,
     bench_train_step,
+    common,
 )
 
 ALL = [
@@ -30,14 +36,23 @@ ALL = [
 SMOKE = [
     ("fig1_2_frontier", bench_frontier.main),
     ("partitioner_vs_naive", bench_partitioner.main),
+    ("kernels_fleet", bench_kernels.fleet_main),
+    ("gibbs_fleet_engine", bench_gibbs_convergence.fleet_main),
 ]
 
 
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            sys.exit("usage: python -m benchmarks.run [--smoke] [--json PATH]")
+        json_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
     unknown = [a for a in argv if a != "--smoke"]
     if unknown:
-        sys.exit(f"usage: python -m benchmarks.run [--smoke]  (got {unknown})")
+        sys.exit(f"usage: python -m benchmarks.run [--smoke] [--json PATH]  (got {unknown})")
     suite = SMOKE if "--smoke" in argv else ALL
     print("name,us_per_call,derived")
     failed = []
@@ -49,6 +64,19 @@ def main(argv=None) -> None:
             failed.append(name)
             traceback.print_exc()
             print(f"{name},FAILED,{type(e).__name__}: {e}")
+    if json_path:
+        import jax
+
+        payload = {
+            "suite": "smoke" if "--smoke" in argv else "all",
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "failed": failed,
+            "rows": common.ROWS,
+        }
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {len(common.ROWS)} rows to {json_path}")
     if failed:
         sys.exit(f"benchmarks failed: {failed}")
 

@@ -24,6 +24,7 @@ from .moments import (
     fit_beta_method_of_moments,
     log_posterior_alpha_ref,
     log_posterior_beta_ref,
+    log_posterior_grid,
     moments_from_log_density,
     update_alpha_beta_params,
 )
@@ -53,6 +54,7 @@ __all__ = [
     "log_likelihood",
     "log_posterior_alpha_ref",
     "log_posterior_beta_ref",
+    "log_posterior_grid",
     "mean_var_completion",
     "moments_from_log_density",
     "normal_cdf",

@@ -14,11 +14,15 @@ The sampler follows the paper exactly:
 
 Implementation notes (TPU-native):
   * the whole sweep loop is a ``jax.lax.scan`` inside one jitted function;
-  * every function broadcasts over leading worker axes, so a fleet of K units
-    is estimated with ``jax.vmap`` in a single device program;
-  * the O(G*N) grid evaluation can be routed to the Pallas kernel
-    (``use_pallas=True``), which is the perf-critical path for production
-    telemetry volumes.
+  * ``gibbs_batch`` is fleet-native: hand it a state whose leaves carry a
+    leading worker axis K (as built by ``vmap(init_state)``) plus (K, N)
+    telemetry and every sub-step runs batched — the O(K*G*N) grid posterior
+    is then ONE fused Pallas launch per sweep covering all workers and both
+    exponents (``use_pallas=True``), not a vmap of per-worker kernels;
+  * single-unit states (scalar leaves) take the same code path with K
+    collapsed, so ``vmap(gibbs_batch)`` remains valid for exotic batching;
+  * ``fit`` streams telemetry batches through ``lax.scan`` with the final
+    partial batch padded + masked, so no observation is ever dropped.
 """
 from __future__ import annotations
 
@@ -75,6 +79,26 @@ def init_state(
     return GibbsState(ng, alpha_prior, beta_prior, mu, lam, alpha, beta, key)
 
 
+def _split5(key: Array) -> Tuple[Array, Array, Array, Array, Array]:
+    """Five-way PRNG split, batched over an optional leading worker axis.
+
+    Per-worker keys are split exactly as a vmap of ``jax.random.split`` would,
+    so the fleet-native sweep reproduces the legacy vmapped chains bitwise.
+    """
+    if key.ndim == 1:
+        k = jax.random.split(key, 5)
+        return k[0], k[1], k[2], k[3], k[4]
+    ks = jax.vmap(lambda kk: jax.random.split(kk, 5))(key)  # (K, 5, 2)
+    return ks[:, 0], ks[:, 1], ks[:, 2], ks[:, 3], ks[:, 4]
+
+
+def _sample(fn, key: Array, *params: Array) -> Array:
+    """Apply a distribution sampler per worker when keys are batched."""
+    if key.ndim == 1:
+        return fn(key, *params)
+    return jax.vmap(fn)(key, *params)
+
+
 @functools.partial(
     jax.jit, static_argnames=("n_iters", "grid_size", "use_pallas", "chain_priors")
 )
@@ -91,10 +115,15 @@ def gibbs_batch(
 ) -> Tuple[GibbsState, Array]:
     """Process one telemetry batch; returns (new_state, log_likelihood).
 
+    Fleet-native: ``state`` may carry a leading worker axis K on every leaf
+    (with t/f/mask shaped (K, N)), in which case all K chains advance inside
+    one program and the grid posterior is a single fused evaluation — one
+    Pallas launch per sweep when ``use_pallas`` — instead of K separate ones.
+
     Args:
       state: current chain state (prior hyperparameters + samples).
-      t, f: observations, shape (N,).
-      mask: optional validity mask (N,).
+      t, f: observations, shape (N,) or (K, N).
+      mask: optional validity mask, same shape as ``t``.
       chain_priors: if True (paper's Algorithm 1), the batch posterior becomes
         the next batch's prior.
     """
@@ -102,22 +131,24 @@ def gibbs_batch(
 
     def sweep(carry, _):
         st = carry
-        key, k_l, k_m, k_a, k_b = jax.random.split(st.key, 5)
+        key, k_l, k_m, k_a, k_b = _split5(st.key)
 
         # -- (mu, lambda) block: conjugate update at current (alpha, beta).
         ng_post = update_normal_gamma(st.ng, t, f, st.alpha, st.beta, mask)
-        lam = sample_gamma(k_l, ng_post.nu0, ng_post.psi0)
-        mu = sample_normal(
-            k_m, ng_post.mu0, 1.0 / jnp.sqrt(jnp.maximum(ng_post.kappa0 * lam, 1e-30))
+        lam = _sample(sample_gamma, k_l, ng_post.nu0, ng_post.psi0)
+        mu = _sample(
+            sample_normal, k_m, ng_post.mu0,
+            1.0 / jnp.sqrt(jnp.maximum(ng_post.kappa0 * lam, 1e-30)),
         )
 
         # -- (alpha, beta) block: grid posterior -> Beta moment fit -> sample.
         a_post, b_post = update_alpha_beta_params(
             grid, t, f, mu, lam, st.alpha, st.beta,
             st.alpha_prior, st.beta_prior, mask, use_pallas=use_pallas,
+            symmetric_grid=True,  # exponent_grid is a symmetric linspace
         )
-        alpha = sample_beta(k_a, a_post.a, a_post.b)
-        beta = sample_beta(k_b, b_post.a, b_post.b)
+        alpha = _sample(sample_beta, k_a, a_post.a, a_post.b)
+        beta = _sample(sample_beta, k_b, b_post.a, b_post.b)
 
         new_st = GibbsState(st.ng, st.alpha_prior, st.beta_prior, mu, lam, alpha, beta, key)
         return new_st, (ng_post, a_post, b_post)
@@ -177,26 +208,41 @@ def fit(
 ) -> Tuple[GibbsState, Array]:
     """Fit one unit's parameters from a telemetry stream (N,) in batches.
 
+    The stream is driven by one ``lax.scan`` (a single compiled program per
+    (batch_size, n_iters, grid_size) signature rather than a Python loop of
+    dispatches).  The final partial batch is padded and masked, so all N
+    observations influence the posterior — the legacy driver silently
+    dropped the tail ``n % batch_size`` observations.
+
     Returns the final state and the per-batch log-likelihood trace
     (the paper's Fig 5 curve).
     """
     n = t.shape[-1]
-    n_batches = max(n // batch_size, 1)
-    n_used = n_batches * batch_size
-    t_b = t[:n_used].reshape(n_batches, batch_size)
-    f_b = f[:n_used].reshape(n_batches, batch_size)
+    n_batches = max(-(-n // batch_size), 1)
+    n_padded = n_batches * batch_size
+    # Padding observations carry mask=0 and interior dummy values: exact
+    # no-ops on every masked reduction.
+    t_b = jnp.pad(t, (0, n_padded - n)).reshape(n_batches, batch_size)
+    f_b = jnp.pad(f, (0, n_padded - n), constant_values=0.5).reshape(
+        n_batches, batch_size
+    )
+    m_b = (jnp.arange(n_padded) < n).astype(jnp.float32).reshape(
+        n_batches, batch_size
+    )
 
     guess = float(jnp.mean(t) / jnp.maximum(jnp.mean(f), 1e-6)) if mu_guess is None else mu_guess
     state = init_state(key, mu_guess=guess)
 
-    lls = []
-    for b in range(n_batches):
-        state, ll = gibbs_batch(
-            state, t_b[b], f_b[b],
+    def step(st, xs):
+        tb, fb, mb = xs
+        st, ll = gibbs_batch(
+            st, tb, fb, mb,
             n_iters=n_iters, grid_size=grid_size, use_pallas=use_pallas,
         )
-        lls.append(ll)
-    return state, jnp.stack(lls)
+        return st, ll
+
+    state, lls = jax.lax.scan(step, state, (t_b, f_b, m_b))
+    return state, lls
 
 
 def fit_fleet(
@@ -207,11 +253,14 @@ def fit_fleet(
     n_iters: int = 20,
     grid_size: int = 512,
     mu_guess: Optional[Array] = None,
+    use_pallas: bool = False,
 ) -> Tuple[GibbsState, Array]:
-    """Vmapped fleet estimation: t, f of shape (K, N) -> per-worker states.
+    """Fleet estimation: t, f of shape (K, N) -> per-worker states.
 
-    One device program estimates every worker simultaneously — this is the
-    production path for thousands of nodes.
+    One device program estimates every worker simultaneously through the
+    fleet-native ``gibbs_batch`` — with ``use_pallas`` the grid posterior of
+    all K workers and both exponents is one kernel launch per sweep.  This is
+    the production path for thousands of nodes.
     """
     k = t.shape[0]
     keys = jax.random.split(key, k)
@@ -228,11 +277,7 @@ def fit_fleet(
         return init_state(key_i, ng=ng)
 
     states = jax.vmap(one)(keys, mu_guess)
-
-    batched = jax.vmap(
-        lambda st, ti, fi: gibbs_batch(
-            st, ti, fi, n_iters=n_iters, grid_size=grid_size
-        )
+    states, ll = gibbs_batch(
+        states, t, f, n_iters=n_iters, grid_size=grid_size, use_pallas=use_pallas
     )
-    states, ll = batched(states, t, f)
     return states, ll

@@ -13,13 +13,49 @@ import jax.numpy as jnp
 
 from .decode_attention import decode_attention_pallas
 from .lru_scan import lru_scan_pallas
-from .posterior_grid import posterior_grid_pallas
+from .posterior_grid import posterior_grid_fleet_pallas, posterior_grid_pallas
 
 Array = jax.Array
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def use_pallas_default() -> bool:
+    """Auto policy for routing the estimation stack through the kernels.
+
+    On TPU the Mosaic lowering is the production path; elsewhere the XLA
+    oracle is faster than interpret-mode emulation, so callers that pass
+    ``use_pallas=None`` get the kernel exactly where it wins.
+    """
+    return jax.default_backend() == "tpu"
+
+
+def posterior_grid_fleet(
+    grid: Array,
+    t: Array,
+    f: Array,
+    mu: Array,
+    lam: Array,
+    alpha: Array,
+    beta: Array,
+    alpha_prior,
+    beta_prior,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Both exponent posteriors for a whole fleet in one kernel launch.
+
+    Signature mirrors ``repro.core.moments.log_posterior_grid``: t/f/mask
+    (K, N), per-worker scalars (K,) -> (K, 2, G).
+    """
+    if mask is None:
+        mask = jnp.ones_like(t)
+    return posterior_grid_fleet_pallas(
+        grid, t, f, mask, mu, lam, alpha, beta,
+        alpha_prior.a, alpha_prior.b, beta_prior.a, beta_prior.b,
+        interpret=_interpret(),
+    )
 
 
 def posterior_grid_alpha(
@@ -33,7 +69,11 @@ def posterior_grid_alpha(
     mask: Optional[Array] = None,
 ) -> Array:
     """Eq 10 on a grid via the Pallas kernel.  Signature mirrors
-    ``repro.core.moments.log_posterior_alpha_ref``."""
+    ``repro.core.moments.log_posterior_alpha_ref``.
+
+    Back-compat single-mode entry: it slices one row out of the fused K=1
+    kernel, which still computes both exponents — production code wanting
+    both should call ``posterior_grid_fleet`` once."""
     if mask is None:
         mask = jnp.ones_like(t)
     return posterior_grid_pallas(
@@ -52,7 +92,8 @@ def posterior_grid_beta(
     prior,
     mask: Optional[Array] = None,
 ) -> Array:
-    """Eq 11 on a grid via the Pallas kernel."""
+    """Eq 11 on a grid via the Pallas kernel (back-compat single-mode slice
+    of the fused kernel — see ``posterior_grid_alpha``)."""
     if mask is None:
         mask = jnp.ones_like(t)
     return posterior_grid_pallas(

@@ -5,7 +5,7 @@ on CPU, real lowering on TPU).  They are deliberately straightforward.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,42 +26,43 @@ def posterior_grid_ref(
     *,
     mode: str = "alpha",
 ) -> Array:
-    """Unnormalized log-posterior of a scaling exponent on a grid.
+    """Deprecated: unnormalized log-posterior of one scaling exponent.
 
     mode="alpha": Eq 10 — grid is alpha, other_exp is the current beta.
     mode="beta" : Eq 11 — grid is beta,  other_exp is the current alpha,
                   including the -beta * sum(log f) Jacobian term.
 
     Shapes: grid (G,), t/f/mask (N,) -> (G,).
+
+    The unified oracle lives in ``repro.core.moments.log_posterior_grid``
+    (fused both-modes, fleet-batched); this shim slices the requested mode
+    out of it for callers of the historical per-mode signature.
     """
-    f = jnp.maximum(f, 1e-6)
-    logf = jnp.log(f)
-    m = None if mask is None else mask.astype(t.dtype)
+    import warnings
 
-    if mode == "alpha":
-        mean = jnp.exp(grid[:, None] * logf[None, :]) * mu  # (G, N)
-        z = (t[None, :] - mean) * jnp.exp(-other_exp * logf)[None, :]
-        sq = z * z
-        if m is not None:
-            sq = sq * m[None, :]
-        quad = -0.5 * lam * jnp.sum(sq, axis=-1)
-        extra = jnp.zeros_like(quad)
-    elif mode == "beta":
-        resid = t - jnp.exp(other_exp * logf) * mu  # (N,)
-        z = resid[None, :] * jnp.exp(-grid[:, None] * logf[None, :])
-        sq = z * z
-        if m is not None:
-            sq = sq * m[None, :]
-            sum_logf = jnp.sum(logf * m)
-        else:
-            sum_logf = jnp.sum(logf)
-        quad = -0.5 * lam * jnp.sum(sq, axis=-1)
-        extra = -grid * sum_logf
-    else:
+    warnings.warn(
+        "repro.kernels.ref.posterior_grid_ref is deprecated; use "
+        "repro.core.moments.log_posterior_grid (fused both-modes oracle) "
+        "or log_posterior_{alpha,beta}_ref.",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    if mode not in ("alpha", "beta"):
         raise ValueError(mode)
+    from repro.core.moments import BetaParams, log_posterior_grid
 
-    g = jnp.clip(grid, 1e-6, 1.0 - 1e-6)
-    return quad + extra + (prior_a - 1.0) * jnp.log(g) + (prior_b - 1.0) * jnp.log1p(-g)
+    prior = BetaParams(jnp.asarray(prior_a, jnp.float32), jnp.asarray(prior_b, jnp.float32))
+    dummy_prior = BetaParams.default()
+    dummy = jnp.asarray(0.5, jnp.float32)
+    if mode == "alpha":
+        both = log_posterior_grid(
+            grid, t, f, mu, lam, dummy, other_exp, prior, dummy_prior, mask
+        )
+        return both[..., 0, :]
+    both = log_posterior_grid(
+        grid, t, f, mu, lam, other_exp, dummy, dummy_prior, prior, mask
+    )
+    return both[..., 1, :]
 
 
 def decode_attention_ref(

@@ -80,6 +80,8 @@ class SchedulerConfig:
     objective: Objective = Objective()
     n_iters: int = 20  # Gibbs sweeps per telemetry batch
     grid_size: int = 256  # exponent-posterior grid resolution
+    use_pallas: Optional[bool] = None  # route estimation through the fused
+    # fleet kernel; None = auto by backend (TPU: Mosaic kernels, else oracle)
     discount: float = 0.9  # power-prior forgetting factor
     mu_guess: float = 1.0  # prior center for per-unit mean time
     ewma: float = 0.8  # anomaly-score smoothing
@@ -119,15 +121,26 @@ def observe(
 
     The power-prior forgetting factor is applied before the batch so the
     estimator tracks drifting systems.  Returns per-worker log-likelihood.
+
+    The whole fleet advances through the fleet-native ``gibbs_batch`` — no
+    per-worker vmap — so with the Pallas path enabled (``config.use_pallas``,
+    auto-on for TPU backends) each sweep's grid posterior is ONE kernel
+    launch covering every worker and both exponents.
     """
-    fleet = jax.vmap(
-        lambda st: gibbs.discount_state(st, config.discount)
-    )(state.gibbs)
-    fleet, ll = jax.vmap(
-        lambda st, t, f: gibbs.gibbs_batch(
-            st, t, f, n_iters=config.n_iters, grid_size=config.grid_size
-        )
-    )(fleet, telemetry.times, telemetry.fracs)
+    use_pallas = config.use_pallas
+    if use_pallas is None:
+        from repro.kernels.ops import use_pallas_default
+
+        use_pallas = use_pallas_default()
+    fleet = gibbs.discount_state(state.gibbs, config.discount)
+    fleet, ll = gibbs.gibbs_batch(
+        fleet,
+        telemetry.times,
+        telemetry.fracs,
+        n_iters=config.n_iters,
+        grid_size=config.grid_size,
+        use_pallas=use_pallas,
+    )
     return state._replace(gibbs=fleet, step=state.step + 1), ll
 
 

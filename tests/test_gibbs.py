@@ -101,6 +101,60 @@ def test_chained_priors_adapt_to_drift():
     assert mu_after < float(state2.mu) + 1.0  # forgetting at least as fast
 
 
+def test_fit_uses_tail_observations():
+    """Regression: the legacy batch driver silently dropped the final
+    n % batch_size observations; the scan driver pads + masks them instead,
+    so every observation influences the posterior."""
+    mu, sigma, alpha, beta = 25.0, 1.5, 0.9, 0.8
+    f, t = _synth(jax.random.PRNGKey(30), 48, mu, sigma, alpha, beta)
+    # Same head, wildly different tail: only the tail distinguishes the runs.
+    t_fast = t.at[32:].set(t[32:] * 0.2)
+
+    st_full, lls = gibbs.fit(
+        jax.random.PRNGKey(31), t, f, batch_size=32, n_iters=10, grid_size=128
+    )
+    st_fast, _ = gibbs.fit(
+        jax.random.PRNGKey(31), t_fast, f, batch_size=32, n_iters=10, grid_size=128
+    )
+    # ceil(48/32) = 2 batches — the tail is processed as its own masked batch
+    assert lls.shape == (2,)
+    # the tail's 5x-faster observations must pull the estimate down
+    assert float(st_fast.ng.mu0) < float(st_full.ng.mu0) - 1.0
+
+
+def test_fit_exact_multiple_unchanged_by_padding():
+    """When N divides batch_size the scan driver adds no padding: the mask is
+    all-ones and results stay finite and sane."""
+    f, t = _synth(jax.random.PRNGKey(33), 128, 20.0, 2.0, 0.9, 0.8)
+    state, lls = gibbs.fit(
+        jax.random.PRNGKey(34), t, f, batch_size=32, n_iters=8, grid_size=128
+    )
+    assert lls.shape == (4,)
+    assert np.isfinite(np.asarray(lls)).all()
+    assert abs(float(state.mu) - 20.0) < 4.0
+
+
+def test_fleet_native_matches_vmapped_chains():
+    """The fleet-native gibbs_batch (one fused grid evaluation for all K
+    workers) must reproduce vmap-of-single-unit chains bitwise: identical
+    per-worker PRNG splits, identical math."""
+    f1, t1 = _synth(jax.random.PRNGKey(40), 96, 25.0, 2.0, 0.9, 0.8)
+    f2, t2 = _synth(jax.random.PRNGKey(41), 96, 10.0, 1.0, 0.8, 0.9)
+    t = jnp.stack([t1, t2])
+    f = jnp.stack([f1, f2])
+    keys = jax.random.split(jax.random.PRNGKey(42), 2)
+    states = jax.vmap(lambda k: gibbs.init_state(k, mu_guess=15.0))(keys)
+
+    fleet, ll_fleet = gibbs.gibbs_batch(states, t, f, n_iters=6, grid_size=64)
+    vmapped, ll_v = jax.vmap(
+        lambda st, ti, fi: gibbs.gibbs_batch(st, ti, fi, n_iters=6, grid_size=64)
+    )(states, t, f)
+
+    for a, b in zip(jax.tree_util.tree_leaves(fleet), jax.tree_util.tree_leaves(vmapped)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ll_fleet), np.asarray(ll_v), rtol=1e-4, atol=1e-3)
+
+
 def test_pallas_path_matches_ref_path():
     f, t = _synth(jax.random.PRNGKey(21), 256, 15.0, 1.0, 0.9, 0.8)
     s_ref, _ = gibbs.fit(jax.random.PRNGKey(22), t, f, batch_size=128,

@@ -4,10 +4,137 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.moments import BetaParams
+from repro.core.moments import BetaParams, log_posterior_grid
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
-from repro.kernels.posterior_grid import posterior_grid_pallas
+from repro.kernels.posterior_grid import (
+    posterior_grid_fleet_pallas,
+    posterior_grid_pallas,
+)
+
+
+def _fleet_case(k, n, seed=0, zero_cols=False):
+    """Synthetic K-worker telemetry with per-worker params and ragged masks."""
+    key = jax.random.PRNGKey(seed)
+    kf, kt, kp = jax.random.split(key, 3)
+    f = jax.random.uniform(kf, (k, n), minval=0.05, maxval=0.95)
+    mu = jnp.linspace(5.0, 40.0, k)
+    t = f**0.9 * mu[:, None] + f**0.7 * 2.0 * jax.random.normal(kt, (k, n))
+    # per-worker ragged validity + (optionally) whole zeroed columns
+    mask = (jnp.arange(n)[None, :] < jnp.linspace(n // 2, n, k)[:, None]).astype(
+        jnp.float32
+    )
+    if zero_cols:
+        mask = mask * (jnp.arange(n) % 5 != 0).astype(jnp.float32)[None, :]
+    lam = jnp.linspace(0.1, 0.5, k)
+    alpha = jnp.linspace(0.6, 0.95, k)
+    beta = jnp.linspace(0.5, 0.9, k)
+    ap = BetaParams(jnp.linspace(1.5, 4.0, k), jnp.linspace(2.0, 3.0, k))
+    bp = BetaParams(jnp.linspace(2.0, 5.0, k), jnp.linspace(1.5, 2.5, k))
+    return t, f, mask, mu, lam, alpha, beta, ap, bp
+
+
+def _assert_logp_close(got, want, rtol=2e-5):
+    scale = 1.0 + float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=rtol, atol=rtol * scale
+    )
+
+
+@pytest.mark.parametrize("zero_cols", [False, True])
+@pytest.mark.parametrize("k,g,n", [(1, 64, 100), (3, 300, 777), (4, 512, 128), (5, 17, 33)])
+def test_posterior_grid_fleet_parity(k, g, n, zero_cols):
+    """One fused launch (interpret mode) == unified oracle, both modes, for
+    odd/padded G and N, per-worker priors, and zero-mask columns."""
+    t, f, mask, mu, lam, alpha, beta, ap, bp = _fleet_case(k, n, zero_cols=zero_cols)
+    grid = jnp.linspace(1e-4, 1 - 1e-4, g, dtype=jnp.float32)
+    got = posterior_grid_fleet_pallas(
+        grid, t, f, mask, mu, lam, alpha, beta, ap.a, ap.b, bp.a, bp.b,
+        interpret=True, block_g=64, block_n=256,
+    )
+    want = log_posterior_grid(grid, t, f, mu, lam, alpha, beta, ap, bp, mask)
+    assert got.shape == (k, 2, g)
+    _assert_logp_close(got, want)
+
+
+def test_oracle_symmetric_grid_identity():
+    """On the (symmetric) exponent grid, the mirrored-pg^2 beta mode —
+    the production fast path — must agree with the general reciprocal form."""
+    from repro.core.moments import exponent_grid
+
+    k, n = 3, 250
+    t, f, mask, mu, lam, alpha, beta, ap, bp = _fleet_case(k, n, seed=9)
+    for g in (64, 257):  # even and odd (padded) grid sizes
+        grid = exponent_grid(g)
+        general = log_posterior_grid(
+            grid, t, f, mu, lam, alpha, beta, ap, bp, mask, symmetric_grid=False
+        )
+        mirrored = log_posterior_grid(
+            grid, t, f, mu, lam, alpha, beta, ap, bp, mask, symmetric_grid=True
+        )
+        _assert_logp_close(mirrored, general, rtol=1e-5)
+
+
+def test_posterior_grid_fleet_matches_vmapped_oracle():
+    """The fleet axis of one launch == vmapping the oracle worker by worker."""
+    k, g, n = 4, 96, 200
+    t, f, mask, mu, lam, alpha, beta, ap, bp = _fleet_case(k, n, seed=3)
+    grid = jnp.linspace(1e-4, 1 - 1e-4, g, dtype=jnp.float32)
+    got = posterior_grid_fleet_pallas(
+        grid, t, f, mask, mu, lam, alpha, beta, ap.a, ap.b, bp.a, bp.b,
+        interpret=True,
+    )
+    want = jax.vmap(
+        lambda ti, fi, mi, mui, lami, ai, bi, apa, apb, bpa, bpb: log_posterior_grid(
+            grid, ti, fi, mui, lami, ai, bi,
+            BetaParams(apa, apb), BetaParams(bpa, bpb), mi,
+        )
+    )(t, f, mask, mu, lam, alpha, beta, ap.a, ap.b, bp.a, bp.b)
+    _assert_logp_close(got, want)
+
+
+def test_posterior_grid_single_unit_is_fleet_slice():
+    """The legacy single-unit, single-mode entry == the matching row of the
+    fused fleet launch with K=1."""
+    g, n = 128, 300
+    t, f, mask, mu, lam, alpha, beta, ap, bp = _fleet_case(1, n, seed=5)
+    grid = jnp.linspace(1e-4, 1 - 1e-4, g, dtype=jnp.float32)
+    fleet = posterior_grid_fleet_pallas(
+        grid, t, f, mask, mu, lam, alpha, beta, ap.a, ap.b, bp.a, bp.b,
+        interpret=True,
+    )
+    got_a = posterior_grid_pallas(
+        grid, t[0], f[0], mask[0], mu[0], lam[0], beta[0], ap.a[0], ap.b[0],
+        mode="alpha", interpret=True,
+    )
+    got_b = posterior_grid_pallas(
+        grid, t[0], f[0], mask[0], mu[0], lam[0], alpha[0], bp.a[0], bp.b[0],
+        mode="beta", interpret=True,
+    )
+    _assert_logp_close(got_a, fleet[0, 0], rtol=1e-6)
+    _assert_logp_close(got_b, fleet[0, 1], rtol=1e-6)
+
+
+def test_posterior_grid_fleet_fully_masked_worker():
+    """A worker with zero valid observations must fall back to its prior
+    (finite everywhere, no NaN/Inf from the dead telemetry)."""
+    k, g, n = 3, 64, 150
+    t, f, mask, mu, lam, alpha, beta, ap, bp = _fleet_case(k, n, seed=7)
+    mask = mask.at[1].set(0.0)
+    grid = jnp.linspace(1e-4, 1 - 1e-4, g, dtype=jnp.float32)
+    got = posterior_grid_fleet_pallas(
+        grid, t, f, mask, mu, lam, alpha, beta, ap.a, ap.b, bp.a, bp.b,
+        interpret=True,
+    )
+    assert bool(jnp.all(jnp.isfinite(got)))
+    want = log_posterior_grid(grid, t, f, mu, lam, alpha, beta, ap, bp, mask)
+    _assert_logp_close(got, want)
+    # prior-only: the dead worker's alpha posterior is exactly the Beta prior
+    gc = jnp.clip(grid, 1e-6, 1 - 1e-6)
+    prior_only = (ap.a[1] - 1.0) * jnp.log(gc) + (ap.b[1] - 1.0) * jnp.log1p(-gc)
+    np.testing.assert_allclose(
+        np.asarray(got[1, 0]), np.asarray(prior_only), rtol=1e-4, atol=1e-4
+    )
 
 
 @pytest.mark.parametrize("mode", ["alpha", "beta"])
