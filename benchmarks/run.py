@@ -15,6 +15,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    bench_dag,
     bench_frontier,
     bench_gibbs_convergence,
     bench_kernels,
@@ -30,6 +31,7 @@ ALL = [
     ("fig5_gibbs_convergence", bench_gibbs_convergence.main),
     ("partitioner_vs_naive", bench_partitioner.main),
     ("kernels", bench_kernels.main),
+    ("dag_engine", bench_dag.main),
     ("train_step", bench_train_step.main),
 ]
 
@@ -38,6 +40,7 @@ SMOKE = [
     ("partitioner_vs_naive", bench_partitioner.main),
     ("kernels_fleet", bench_kernels.fleet_main),
     ("gibbs_fleet_engine", bench_gibbs_convergence.fleet_main),
+    ("dag_stacked_engine", bench_dag.smoke_main),
 ]
 
 

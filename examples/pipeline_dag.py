@@ -1,0 +1,114 @@
+"""Multi-stage pipeline demo: stage-wise Bayesian splits vs uniform splits.
+
+A 3-stage workflow (ingest -> transform -> publish), each stage partitioned
+across 4 heterogeneous workers whose speeds the system does NOT know.  The
+whole pipeline's telemetry advances as ONE stacked (S, K, N) estimation
+program — the stage axis folds into the fleet axis, so even S stages of K
+workers cost a single fused launch per Gibbs sweep — and ``propose_dag``
+then partitions stage by stage against the shared objective, composing the
+per-stage makespan moments into end-to-end completion statistics.
+
+    PYTHONPATH=src python examples/pipeline_dag.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sched
+from repro.core.frontier import UnitParams
+
+S, K, N = 3, 4, 96
+STAGES = ("ingest", "transform", "publish")
+
+# Ground truth (unknown to the scheduler): every stage has a 4-6x speed
+# spread across its workers, and the spreads do not line up across stages.
+TRUE_MU = np.array(
+    [
+        [4.0, 9.0, 16.0, 24.0],   # ingest
+        [20.0, 5.0, 12.0, 30.0],  # transform (different worker is fastest)
+        [8.0, 8.0, 3.0, 18.0],    # publish
+    ],
+    np.float32,
+)
+TRUE_SIGMA = np.full((S, K), 1.0, np.float32)
+ALPHA = BETA = 0.9
+
+rng = np.random.default_rng(0)
+
+
+def telemetry(fracs: np.ndarray, n: int = N) -> sched.Telemetry:
+    """Passive telemetry: each stage works its current split, but request
+    sizes vary (paper §1: observations come from actual diverse workloads,
+    not controlled experiments), which is what identifies the scaling
+    exponents — a worker only ever seen at one fixed fraction confounds
+    (alpha, mu)."""
+    jitter = rng.uniform(0.3, 1.7, size=(S, K, n))
+    f = np.clip(fracs[..., None] * jitter, 0.02, 0.98).astype(np.float32)
+    noise = rng.normal(size=(S, K, n))
+    t = np.maximum(
+        f**ALPHA * TRUE_MU[..., None] + f**BETA * TRUE_SIGMA[..., None] * noise,
+        1e-3,
+    ).astype(np.float32)
+    return sched.Telemetry(fracs=jnp.asarray(f), times=jnp.asarray(t))
+
+
+# ---------------------------------------------------------------------------
+# 1. Learn the whole pipeline online: one stacked program per observe call.
+# ---------------------------------------------------------------------------
+dag = sched.WorkflowDAG.chain(S, K)
+config = sched.SchedulerConfig(n_iters=10, grid_size=128, mu_guess=12.0)
+state = sched.init_dag(config, dag, jax.random.PRNGKey(0))
+
+fracs = np.asarray(sched.uniform_fractions(dag))  # start naive
+for round_ in range(5):
+    state, ll = sched.observe_dag(state, telemetry(fracs), config)
+    fracs, stats = sched.propose_dag(state, dag, config)
+    fracs = np.asarray(fracs)
+    print(
+        f"round {round_}: mean ll={float(jnp.mean(ll)):8.2f}   "
+        f"E[end-to-end]={float(stats.e_t):6.2f}  Var={float(stats.var):.3f}"
+    )
+
+learned = sched.stage_params(state)
+print("\nlearned stage speeds (posterior mean mu, true in parens):")
+for si, name in enumerate(STAGES):
+    row = "  ".join(
+        f"{float(learned.mu[si, k]):5.1f} ({TRUE_MU[si, k]:4.1f})" for k in range(K)
+    )
+    print(f"  {name:10s} {row}")
+
+# ---------------------------------------------------------------------------
+# 2. Evaluate the proposal vs the uniform baseline at the TRUE parameters.
+# ---------------------------------------------------------------------------
+true_params = UnitParams.of(
+    TRUE_MU, TRUE_SIGMA, np.full((S, K), ALPHA), np.full((S, K), BETA)
+)
+st_bayes = sched.dag_stats(dag, jnp.asarray(fracs), true_params)
+st_uni = sched.dag_stats(dag, sched.uniform_fractions(dag), true_params)
+
+print("\nend-to-end completion (at TRUE parameters):")
+print(f"  uniform splits   E[t]={float(st_uni.e_t):6.2f}  Var={float(st_uni.var):6.3f}")
+print(f"  Bayesian splits  E[t]={float(st_bayes.e_t):6.2f}  Var={float(st_bayes.var):6.3f}")
+gain = 100.0 * (1.0 - float(st_bayes.e_t) / float(st_uni.e_t))
+print(f"  -> {gain:.1f}% lower expected end-to-end latency")
+
+print("\nper-stage splits (workers sorted fast->slow get more->less):")
+for si, name in enumerate(STAGES):
+    print(f"  {name:10s} " + "  ".join(f"{fracs[si, k]:.3f}" for k in range(K)))
+
+# ---------------------------------------------------------------------------
+# 3. Monte-Carlo sanity check of the composed moments.
+# ---------------------------------------------------------------------------
+n_mc = 200_000
+total = np.zeros(n_mc)
+for si in range(S):
+    mean = fracs[si] ** ALPHA * TRUE_MU[si]
+    std = fracs[si] ** BETA * TRUE_SIGMA[si]
+    total += rng.normal(mean, std, size=(n_mc, K)).max(axis=1)
+print(
+    f"\ncomposed E[t]={float(st_bayes.e_t):.2f} vs Monte-Carlo {total.mean():.2f}  "
+    f"(Var {float(st_bayes.var):.3f} vs {total.var():.3f})"
+)
+
+assert float(st_bayes.e_t) < float(st_uni.e_t), "Bayesian splits must beat uniform"
+print("\nOK: stage-wise Bayesian splits beat uniform splits end-to-end.")

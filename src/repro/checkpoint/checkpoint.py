@@ -106,6 +106,15 @@ class CheckpointManager:
             raise ValueError(
                 f"checkpoint has {len(arrs)} leaves, structure needs {len(leaves)}"
             )
+        # Shape drift must fail HERE (callers keep a legacy fallback), not
+        # surface later as a runtime crash: leaf count alone let e.g. an old
+        # scalar ewma_count restore into today's per-worker (K,) slot.
+        for i, (arr, leaf) in enumerate(zip(arrs, leaves)):
+            if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"checkpoint leaf {i} has shape {tuple(arr.shape)}, "
+                    f"structure needs {tuple(leaf.shape)}"
+                )
         restored = jax.tree_util.tree_unflatten(treedef, arrs)
         return restored, manifest["extra"]
 

@@ -12,12 +12,15 @@ from .distributions import (
 from .frontier import (
     UnitParams,
     completion_cdf,
+    dag_completion_moments,
     mean_var_completion,
     optimal_two_way_fraction,
+    parallel_max_moments,
     pareto_mask,
+    serial_moments,
     sweep_two_way,
 )
-from .gibbs import GibbsState, fit, fit_fleet, gibbs_batch, init_state
+from .gibbs import GibbsState, fit, fit_dag, fit_fleet, gibbs_batch, init_state
 from .moments import (
     BetaParams,
     exponent_grid,
@@ -44,9 +47,11 @@ __all__ = [
     "WorkerTelemetry",
     "beta_logpdf",
     "completion_cdf",
+    "dag_completion_moments",
     "exponent_grid",
     "fit",
     "fit_beta_method_of_moments",
+    "fit_dag",
     "fit_fleet",
     "gamma_logpdf",
     "gibbs_batch",
@@ -60,8 +65,10 @@ __all__ = [
     "normal_cdf",
     "normal_logpdf",
     "optimal_two_way_fraction",
+    "parallel_max_moments",
     "optimize_fractions",
     "pareto_mask",
+    "serial_moments",
     "posterior_predictive_logpdf",
     "quantize_fractions",
     "sample_beta",

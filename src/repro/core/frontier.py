@@ -65,6 +65,20 @@ def completion_cdf(eps: Array, fracs: Array, params: UnitParams) -> Array:
     return jnp.prod(cdfs, axis=-1)
 
 
+def _quad_grid(means: Array, stds: Array, num_points: int, dtype) -> Array:
+    """Quadrature abscissae on [0, max(mean + 8 std)] — the survival
+    integrand is exponentially small beyond."""
+    upper = jnp.maximum(jnp.max(means + 8.0 * stds), 1e-6)
+    return jnp.linspace(0.0, 1.0, num_points, dtype=dtype) * upper
+
+
+def _moments_from_survival(eps: Array, surv: Array) -> Tuple[Array, Array]:
+    """(E, Var) of a nonnegative variable from its survival function values."""
+    e_t = jnp.trapezoid(surv, eps)
+    e_t2 = 2.0 * jnp.trapezoid(eps * surv, eps)
+    return e_t, jnp.maximum(e_t2 - e_t * e_t, 0.0)
+
+
 def mean_var_completion(
     fracs: Array,
     params: UnitParams,
@@ -72,19 +86,97 @@ def mean_var_completion(
 ) -> Tuple[Array, Array]:
     """E(t) and Var(t) of the max-completion time by trapezoid quadrature.
 
-    Integrates the survival function on [0, max_k(mean_k + 8 std_k)] — the
-    integrand is exponentially small beyond.  Differentiable in ``fracs`` so
-    the partitioner can use gradients.
+    Differentiable in ``fracs`` so the partitioner can use gradients.
     """
     mean, std = component_mean_std(fracs, params)
-    upper = jnp.max(mean + 8.0 * std)
-    upper = jnp.maximum(upper, 1e-6)
-    eps = jnp.linspace(0.0, 1.0, num_points, dtype=fracs.dtype) * upper
+    eps = _quad_grid(mean, std, num_points, fracs.dtype)
     surv = 1.0 - completion_cdf(eps, fracs, params)  # (Q,)
-    e_t = jnp.trapezoid(surv, eps)
-    e_t2 = 2.0 * jnp.trapezoid(eps * surv, eps)
-    var = jnp.maximum(e_t2 - e_t * e_t, 0.0)
-    return e_t, var
+    return _moments_from_survival(eps, surv)
+
+
+# --------------------------------------------------------------------------
+# stage composition (multi-stage workflow DAGs)
+# --------------------------------------------------------------------------
+def serial_moments(stage_means: Array, stage_vars: Array) -> Tuple[Array, Array]:
+    """Serial (chain) composition of stage completion moments.
+
+    A pipeline's end-to-end time is the SUM of its stage makespans (stage
+    s+1 starts when stage s finishes), so with independent stage times the
+    mean and variance both add — the companion paper's sequential-channel
+    composition.  ``stage_means``/``stage_vars`` are (S,) (or (S, ...) for
+    batched composition over a trailing axis).
+    """
+    return jnp.sum(stage_means, axis=0), jnp.sum(stage_vars, axis=0)
+
+
+def parallel_max_moments(
+    branch_means: Array,
+    branch_vars: Array,
+    num_points: int = DEFAULT_QUAD_POINTS,
+) -> Tuple[Array, Array]:
+    """Moments of the max over parallel branches by survival quadrature.
+
+    Each branch's completion time is moment-matched to a Normal; the max of
+    independent branches then has CDF ``prod_b Phi((eps - m_b)/s_b)``, and
+    E/Var follow from the same survival-function integration used for the
+    within-stage worker max (:func:`mean_var_completion`).  Branches that
+    share ancestors are treated as independent (the classic PERT
+    approximation) — the induced positive correlation means the true E[max]
+    is slightly LOWER than reported, so the composition errs conservative.
+    """
+    std = jnp.sqrt(jnp.maximum(branch_vars, 1e-18))
+    eps = _quad_grid(branch_means, std, num_points, jnp.float32)
+    cdfs = normal_cdf(eps[:, None], branch_means, std)  # (Q, B)
+    surv = 1.0 - jnp.prod(cdfs, axis=-1)
+    return _moments_from_survival(eps, surv)
+
+
+def dag_completion_moments(
+    preds: Tuple[Tuple[int, ...], ...],
+    stage_means: Array,
+    stage_vars: Array,
+    *,
+    num_points: int = DEFAULT_QUAD_POINTS,
+) -> Tuple[Array, Array]:
+    """End-to-end (E, Var) of a stage DAG by topological reduction.
+
+    ``preds`` is the static topology: ``preds[i]`` lists the stages that must
+    finish before stage i starts, with every predecessor index < i (stages
+    topologically numbered — ``repro.sched.WorkflowDAG`` guarantees this).
+    Each stage's finish time is tracked as a moment-matched Normal: a stage's
+    start is the max over its predecessors' finishes
+    (:func:`parallel_max_moments`), its finish adds its own makespan moments
+    (:func:`serial_moments` pairwise), and the DAG completes at the max over
+    sink stages.  A serial chain reduces exactly to summed moments; parallel
+    branches compose by quadrature over the per-branch survival functions.
+    """
+    s = len(preds)
+    fin_e: list = [None] * s
+    fin_v: list = [None] * s
+    for i in range(s):
+        ps = preds[i]
+        if not ps:
+            start_e = jnp.asarray(0.0, jnp.float32)
+            start_v = jnp.asarray(0.0, jnp.float32)
+        elif len(ps) == 1:
+            start_e, start_v = fin_e[ps[0]], fin_v[ps[0]]
+        else:
+            start_e, start_v = parallel_max_moments(
+                jnp.stack([fin_e[p] for p in ps]),
+                jnp.stack([fin_v[p] for p in ps]),
+                num_points,
+            )
+        fin_e[i] = start_e + stage_means[i]
+        fin_v[i] = start_v + stage_vars[i]
+    has_succ = {p for pp in preds for p in pp}
+    sinks = [i for i in range(s) if i not in has_succ]
+    if len(sinks) == 1:
+        return fin_e[sinks[0]], fin_v[sinks[0]]
+    return parallel_max_moments(
+        jnp.stack([fin_e[i] for i in sinks]),
+        jnp.stack([fin_v[i] for i in sinks]),
+        num_points,
+    )
 
 
 def sweep_two_way(

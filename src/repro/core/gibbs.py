@@ -230,7 +230,10 @@ def fit(
         n_batches, batch_size
     )
 
-    guess = float(jnp.mean(t) / jnp.maximum(jnp.mean(f), 1e-6)) if mu_guess is None else mu_guess
+    # Keep the guess as a traced array (no float() host sync): ``fit`` must
+    # compose under jit/vmap, where forcing concretization raises a
+    # TracerConversionError.  Mirrors ``fit_fleet``'s array path.
+    guess = jnp.mean(t) / jnp.maximum(jnp.mean(f), 1e-6) if mu_guess is None else mu_guess
     state = init_state(key, mu_guess=guess)
 
     def step(st, xs):
@@ -281,3 +284,62 @@ def fit_fleet(
         states, t, f, n_iters=n_iters, grid_size=grid_size, use_pallas=use_pallas
     )
     return states, ll
+
+
+def fold_stage_axis(tree):
+    """Fold (S, K, ...) pytree leaves into the fleet axis: (S*K, ...).
+
+    The stacked DAG program estimates every stage's fleet in ONE fleet-native
+    ``gibbs_batch`` by presenting the stage-stacked fleet as S*K workers —
+    stage-major, so stage s worker k lands at flat row s*K + k.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: jnp.reshape(x, (x.shape[0] * x.shape[1],) + x.shape[2:]), tree
+    )
+
+
+def unfold_stage_axis(tree, num_stages: int):
+    """Inverse of :func:`fold_stage_axis`: (S*K, ...) leaves -> (S, K, ...)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.reshape(
+            x, (num_stages, x.shape[0] // num_stages) + x.shape[1:]
+        ),
+        tree,
+    )
+
+
+def fit_dag(
+    key: Array,
+    t: Array,
+    f: Array,
+    *,
+    n_iters: int = 20,
+    grid_size: int = 512,
+    mu_guess: Optional[Array] = None,
+    use_pallas: bool = False,
+) -> Tuple[GibbsState, Array]:
+    """Stacked stage-fleet estimation: t, f of shape (S, K, N).
+
+    A workflow pipeline of S stages, each partitioned across K workers, is
+    estimated as ONE (S, K, N) program: the stage axis is folded into the
+    fleet axis so the whole DAG — every stage, every worker, both exponent
+    posteriors — advances through a single fleet-native ``gibbs_batch``
+    (one fused Pallas launch per sweep with ``use_pallas``), never a Python
+    loop over stages.  PRNG keys are split stage-major (stage s worker k
+    gets split index s*K + k), so the result bitwise-matches S independent
+    ``fit_fleet`` calls handed the corresponding key slices.
+
+    Returns per-stage-per-worker states with (S, K) leaves and the (S, K)
+    log-likelihood.
+    """
+    s, k, n = t.shape
+    states, ll = fit_fleet(
+        key,
+        t.reshape(s * k, n),
+        f.reshape(s * k, n),
+        n_iters=n_iters,
+        grid_size=grid_size,
+        mu_guess=None if mu_guess is None else jnp.reshape(mu_guess, (s * k,)),
+        use_pallas=use_pallas,
+    )
+    return unfold_stage_axis(states, s), ll.reshape(s, k)

@@ -67,10 +67,18 @@ class FaultToleranceMonitor:
                 for i, h in enumerate(self.health)
             ]
         )
-        # soft stragglers: posterior-predictive anomaly (paper's model)
-        safe_times = np.where(finite, times, 1e6)
-        scores = self.partitioner.anomaly_scores(fracs, safe_times)
-        flags = self.partitioner.flag_stragglers(self.straggler_sigma)
+        # soft stragglers: posterior-predictive anomaly (paper's model).
+        # Hard failures carry non-finite times — they are handled above by
+        # eviction and must NEVER enter the soft-anomaly statistics: a
+        # fabricated placeholder time would permanently corrupt the dead
+        # worker's EWMA and skew the median/MAD baseline the whole live
+        # fleet is judged against.  The validity mask keeps them out
+        # (``anomaly`` substitutes interior dummies for masked slots itself).
+        scores = self.partitioner.anomaly_scores(fracs, times, valid=finite)
+        alive = np.array([h.alive for h in self.health])
+        flags = self.partitioner.flag_stragglers(
+            self.straggler_sigma, valid=finite & alive
+        )
         for i, h in enumerate(self.health):
             h.anomaly_score = float(scores[i]) if i < len(scores) else 0.0
             h.flagged = bool(flags[i]) if i < len(flags) else False

@@ -48,9 +48,30 @@ def posterior_grid_fleet(
 
     Signature mirrors ``repro.core.moments.log_posterior_grid``: t/f/mask
     (K, N), per-worker scalars (K,) -> (K, 2, G).
+
+    Stacked leading axes are folded into the fleet axis before the launch:
+    a workflow DAG's (S, K, N) telemetry block (per-stage scalars (S, K))
+    is presented to the kernel as one S*K-worker fleet and the (S*K, 2, G)
+    output is unfolded back — the kernel itself never changes, and the whole
+    DAG still costs ONE launch.
     """
     if mask is None:
         mask = jnp.ones_like(t)
+    lead = t.shape[:-1]
+    if t.ndim > 2:
+        n = t.shape[-1]
+        flat_kn = lambda x: jnp.reshape(x, (-1, n))
+        flat_k = lambda x: jnp.reshape(
+            jnp.broadcast_to(jnp.asarray(x, jnp.float32), lead), (-1,)
+        )
+        out = posterior_grid_fleet_pallas(
+            grid, flat_kn(t), flat_kn(f), flat_kn(mask),
+            flat_k(mu), flat_k(lam), flat_k(alpha), flat_k(beta),
+            flat_k(alpha_prior.a), flat_k(alpha_prior.b),
+            flat_k(beta_prior.a), flat_k(beta_prior.b),
+            interpret=_interpret(),
+        )
+        return jnp.reshape(out, lead + out.shape[1:])
     return posterior_grid_fleet_pallas(
         grid, t, f, mask, mu, lam, alpha, beta,
         alpha_prior.a, alpha_prior.b, beta_prior.a, beta_prior.b,

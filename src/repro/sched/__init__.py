@@ -12,7 +12,28 @@ fleets, and checkpointable through ``repro.checkpoint.CheckpointManager``:
 ``Scheduler`` is the thin imperative shell (config + current state) used by
 the trainer/server loops; ``repro.core.HeterogeneityAwarePartitioner`` is the
 deprecated legacy wrapper delegating here.
+
+Multi-stage pipelines lift the same API to workflow DAGs (``repro.sched.dag``):
+
+    state = sched.init_dag(config, dag, key)          # dag: WorkflowDAG
+    state, ll     = sched.observe_dag(state, telemetry, config)  # (S, K, N)
+    fracs, stats  = sched.propose_dag(state, dag, config)        # (S, K)
+
+Estimation of the whole DAG is ONE stacked (S, K, N) program — the stage
+axis folds into the fleet axis, never a Python loop over stages.
 """
+from .dag import (
+    DagProposeStats,
+    DagState,
+    WorkflowDAG,
+    dag_stats,
+    init_dag,
+    observe_dag,
+    path_lengths,
+    propose_dag,
+    stage_params,
+    uniform_fractions,
+)
 from .objectives import Objective
 from .quantize import quantize_fractions
 from .scheduler import (
@@ -31,24 +52,36 @@ from .scheduler import (
     remove_workers,
     solve_fractions,
     unit_params,
+    unit_params_from_gibbs,
 )
 
 __all__ = [
+    "DagProposeStats",
+    "DagState",
     "Objective",
     "ProposeStats",
     "Scheduler",
     "SchedulerConfig",
     "SchedulerState",
     "Telemetry",
+    "WorkflowDAG",
     "add_workers",
     "anomaly",
+    "dag_stats",
     "flag_stragglers",
     "init",
+    "init_dag",
     "num_workers",
     "observe",
+    "observe_dag",
+    "path_lengths",
     "propose",
+    "propose_dag",
     "quantize_fractions",
     "remove_workers",
     "solve_fractions",
+    "stage_params",
+    "uniform_fractions",
     "unit_params",
+    "unit_params_from_gibbs",
 ]

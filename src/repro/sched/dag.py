@@ -1,0 +1,366 @@
+"""Stage-structured workflow DAGs: stacked estimation + composed frontier.
+
+The paper partitions ONE workflow stage across K uncertain units; real
+workflows are pipelines.  This module lifts the whole scheduler stack from a
+simplex to a *graph*:
+
+  * ``WorkflowDAG`` — S stages (each a K-worker fleet with its own exponent
+    posteriors) plus a static precedence topology.  Serial chains are the
+    common case; general DAGs compose via topological reduction
+    (``frontier.dag_completion_moments``).
+  * ``DagState`` — one ``GibbsState`` whose leaves carry (S, K) leading axes.
+    Estimation NEVER loops over stages: ``observe_dag`` / ``core.gibbs.fit_dag``
+    fold the stage axis into the fleet axis and advance the entire (S, K, N)
+    telemetry block through one fleet-native ``gibbs_batch`` — a single fused
+    Pallas launch per sweep sees S*K workers.
+  * ``propose_dag`` — partitions stage by stage against the shared
+    ``Objective``.  The moment-separable kinds decompose exactly for chains
+    (E and Var of a sum both add); budgeted kinds (``var_budget``,
+    ``deadline``) allocate the end-to-end budget across stages, and the
+    critical-path-aware variant spends the risk budget where variance hurts
+    end-to-end latency most (stages on short parallel branches absorb slack
+    instead of budget).
+
+All propose-side transitions are pure and jit-compatible: the topology is a
+frozen, hashable dataclass (jit-static), stage moments stay traced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gibbs
+from repro.core.frontier import (
+    UnitParams,
+    dag_completion_moments,
+    mean_var_completion,
+)
+
+from .objectives import Objective
+from .scheduler import (
+    SchedulerConfig,
+    Telemetry,
+    advance_fleet,
+    solve_fractions,
+    unit_params_from_gibbs,
+)
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# topology
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class WorkflowDAG:
+    """Static topology of a stage-structured workflow.
+
+    ``preds[i]`` lists the stages that must finish before stage i starts;
+    stages must be numbered topologically (every predecessor index < i), so
+    the structure is acyclic by construction and composition can run one
+    forward pass.  ``num_workers`` is the per-stage fleet width K — uniform
+    across stages so the (S, K, N) telemetry block stacks into one fused
+    estimation program (heterogeneous fleets pad to max K with masks).
+
+    Hashable and immutable: rides through ``jax.jit`` as a static argument.
+    """
+
+    preds: Tuple[Tuple[int, ...], ...]
+    num_workers: int
+    names: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self):
+        if self.num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        for i, ps in enumerate(self.preds):
+            for p in ps:
+                if not 0 <= p < i:
+                    raise ValueError(
+                        f"stage {i} depends on stage {p}: stages must be "
+                        "numbered topologically (predecessor < successor); "
+                        "cycles are unrepresentable"
+                    )
+        if self.names is not None and len(self.names) != len(self.preds):
+            raise ValueError("names must match num_stages")
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def chain(num_stages: int, num_workers: int) -> "WorkflowDAG":
+        """A serial pipeline: stage i feeds stage i+1."""
+        preds = tuple(() if i == 0 else (i - 1,) for i in range(num_stages))
+        return WorkflowDAG(preds=preds, num_workers=num_workers)
+
+    @staticmethod
+    def from_edges(
+        num_stages: int, edges: Tuple[Tuple[int, int], ...], num_workers: int
+    ) -> "WorkflowDAG":
+        """Build from (upstream, downstream) pairs (topologically numbered)."""
+        preds = [[] for _ in range(num_stages)]
+        for u, v in edges:
+            if not 0 <= v < num_stages:
+                raise ValueError(f"edge ({u}, {v}) out of range")
+            preds[v].append(u)
+        return WorkflowDAG(
+            preds=tuple(tuple(sorted(set(p))) for p in preds),
+            num_workers=num_workers,
+        )
+
+    # -- structure ---------------------------------------------------------
+    @property
+    def num_stages(self) -> int:
+        return len(self.preds)
+
+    @property
+    def sinks(self) -> Tuple[int, ...]:
+        has_succ = {p for pp in self.preds for p in pp}
+        return tuple(i for i in range(self.num_stages) if i not in has_succ)
+
+    @property
+    def is_chain(self) -> bool:
+        return all(
+            ps == (() if i == 0 else (i - 1,)) for i, ps in enumerate(self.preds)
+        )
+
+    def succs(self, i: int) -> Tuple[int, ...]:
+        return tuple(j for j in range(self.num_stages) if i in self.preds[j])
+
+
+def path_lengths(dag: WorkflowDAG, stage_means: Array) -> Tuple[Array, Array]:
+    """Longest expected path THROUGH each stage, and the critical-path length.
+
+    ``through[i] = fwd[i] + bwd[i] - mean[i]`` where fwd/bwd are the longest
+    expected path ending at / starting from stage i.  The topology is static
+    (Python loop over stage indices) while the means stay traced, so this
+    jits.  ``through[i] / max(through)`` is the criticality weight used by
+    the budget allocator: 1 on the critical path, < 1 for stages whose
+    longest path has slack against it.
+    """
+    s = dag.num_stages
+    fwd: list = [None] * s
+    for i in range(s):
+        up = [fwd[p] for p in dag.preds[i]]
+        start = functools.reduce(jnp.maximum, up) if up else jnp.asarray(0.0, jnp.float32)
+        fwd[i] = start + stage_means[i]
+    bwd: list = [None] * s
+    for i in reversed(range(s)):
+        down = [bwd[j] for j in dag.succs(i)]
+        tail = functools.reduce(jnp.maximum, down) if down else jnp.asarray(0.0, jnp.float32)
+        bwd[i] = tail + stage_means[i]
+    through = jnp.stack([fwd[i] + bwd[i] - stage_means[i] for i in range(s)])
+    return through, jnp.max(through)
+
+
+# --------------------------------------------------------------------------
+# state + estimation (stacked — never a Python loop over stages)
+# --------------------------------------------------------------------------
+class DagState(NamedTuple):
+    """Everything the DAG scheduler has learned; a registered pytree.
+
+    ``gibbs`` leaves carry (S, K, ...) leading axes — stage-major, matching
+    ``gibbs.fold_stage_axis`` — so checkpointing, vmap-over-tenants, and the
+    fused estimation path all treat the DAG as one S*K fleet.
+    """
+
+    gibbs: gibbs.GibbsState  # per-stage-per-worker posteriors, leaves (S, K, ...)
+    step: Array  # scalar, observe_dag() calls so far
+    key: Array  # DAG-scheduler PRNG key
+
+
+class DagProposeStats(NamedTuple):
+    """Per-stage and end-to-end statistics of a proposed stage-wise split."""
+
+    stage_e: Array  # (S,) expected makespan of each stage at its split
+    stage_var: Array  # (S,) completion-time variance of each stage
+    e_t: Array  # end-to-end expected completion (topological composition)
+    var: Array  # end-to-end completion variance
+    score: Array  # DAG-level objective score (lower is better)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "dag"))
+def init_dag(config: SchedulerConfig, dag: WorkflowDAG, key: Array) -> DagState:
+    """Fresh beliefs for every stage's fleet."""
+    s, k = dag.num_stages, dag.num_workers
+    key, sub = jax.random.split(key)
+    keys = jax.random.split(sub, s * k)
+    fleet = jax.vmap(lambda kk: gibbs.init_state(kk, mu_guess=config.mu_guess))(keys)
+    return DagState(
+        gibbs=gibbs.unfold_stage_axis(fleet, s),
+        step=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def observe_dag(
+    state: DagState,
+    telemetry: Telemetry,
+    config: SchedulerConfig = SchedulerConfig(),
+) -> Tuple[DagState, Array]:
+    """Advance every stage's posteriors from one (S, K, N) telemetry block.
+
+    The stage axis folds into the fleet axis, so the whole DAG advances as
+    ONE stacked fleet-native ``gibbs_batch`` program — with the Pallas path
+    each sweep's grid posterior is a single kernel launch covering S*K
+    workers and both exponents.  Returns per-stage-per-worker (S, K)
+    log-likelihood.
+    """
+    s = telemetry.times.shape[0]
+    fold = gibbs.fold_stage_axis
+    fleet, ll = advance_fleet(
+        fold(state.gibbs), fold(telemetry.times), fold(telemetry.fracs), config
+    )
+    return (
+        state._replace(gibbs=gibbs.unfold_stage_axis(fleet, s), step=state.step + 1),
+        ll.reshape(telemetry.times.shape[:2]),
+    )
+
+
+def stage_params(state: DagState, *, use_samples: bool = False) -> UnitParams:
+    """Current point estimates as frontier parameters, leaves (S, K)."""
+    return unit_params_from_gibbs(state.gibbs, use_samples=use_samples)
+
+
+# --------------------------------------------------------------------------
+# partitioning
+# --------------------------------------------------------------------------
+def uniform_fractions(dag: WorkflowDAG) -> Array:
+    """The naive baseline: every stage split 1/K."""
+    return jnp.full(
+        (dag.num_stages, dag.num_workers), 1.0 / dag.num_workers, jnp.float32
+    )
+
+
+def dag_stats(
+    dag: WorkflowDAG,
+    fracs: Array,
+    params: UnitParams,
+    objective: Objective = Objective(),
+    *,
+    num_points: int = 512,
+) -> DagProposeStats:
+    """Compose per-stage makespan moments into end-to-end DAG statistics."""
+    stage_e, stage_var = jax.vmap(
+        lambda fr, p: mean_var_completion(fr, p, num_points)
+    )(fracs, params)
+    e_t, var = dag_completion_moments(
+        dag.preds, stage_e, stage_var, num_points=num_points
+    )
+    if objective.needs_cdf():
+        # Normal-matched end-to-end tail: P(T <= d) under the composed moments.
+        from repro.core.distributions import normal_cdf
+
+        score = -normal_cdf(
+            jnp.asarray(objective.deadline, jnp.float32),
+            e_t,
+            jnp.sqrt(jnp.maximum(var, 1e-18)),
+        )
+    else:
+        score = objective.score_moments(e_t, var)
+    return DagProposeStats(
+        stage_e=stage_e, stage_var=stage_var, e_t=e_t, var=var, score=score
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dag", "config", "critical_path_aware")
+)
+def propose_dag(
+    state: DagState,
+    dag: WorkflowDAG,
+    config: SchedulerConfig = SchedulerConfig(),
+    *,
+    critical_path_aware: bool = True,
+) -> Tuple[Array, DagProposeStats]:
+    """Objective-optimal stage-wise splits under the current beliefs.
+
+    Returns fractions (S, K) — each row on the K-simplex — plus composed
+    end-to-end statistics.  Decomposition by objective kind:
+
+      mean       Stage-separable for chains: E[sum] = sum E -> each stage
+                 independently minimizes its expected makespan.
+      mean_var   Separable too (Var of a sum of independent stage times
+                 adds); the critical-path-aware variant scales each stage's
+                 risk aversion by its criticality — variance on a slack
+                 branch cannot move end-to-end latency, so it is not worth
+                 paying expected time to remove.
+      var_budget The end-to-end variance budget is allocated across stages
+                 proportional to their unconstrained variance share (times
+                 criticality when critical-path-aware), then each stage
+                 solves its own budgeted problem; one reallocation round
+                 returns slack from stages that beat their slice to the
+                 stages that clipped against theirs.
+      deadline   The end-to-end deadline splits along paths: stage s gets
+                 d_s = d * E_s / L_s with L_s the longest expected path
+                 through s.  Along ANY path the allocated deadlines sum to
+                 <= d, so the product of per-stage P(t_s <= d_s) lower-bounds
+                 P(T <= d) — each stage then maximizes its own term.
+
+    All stage solves are ONE vmapped ``solve_fractions`` program (the
+    objective kind is static; per-stage budget/deadline slices ride through
+    as traced overrides), not a Python loop of per-stage compilations.
+    """
+    params = stage_params(state)
+    obj = config.objective
+    solve_kw = dict(
+        steps=config.opt_steps,
+        lr=config.opt_lr,
+        num_points=config.num_points,
+        min_fraction=config.min_fraction,
+    )
+
+    # Unconstrained (risk-neutral) pre-solve: the allocation baseline.
+    mean_obj = Objective.mean()
+    f0, st0 = jax.vmap(
+        lambda p: solve_fractions(p, objective=mean_obj, **solve_kw)
+    )(params)
+    e0, v0 = st0.e_t, st0.var  # (S,)
+
+    through, crit_len = path_lengths(dag, e0)
+    crit = (
+        through / jnp.maximum(crit_len, 1e-9)
+        if critical_path_aware
+        else jnp.ones_like(e0)
+    )
+
+    if obj.kind == "mean":
+        fracs = f0
+    elif obj.kind == "mean_var":
+        ra = obj.risk_aversion * crit  # (S,)
+        fracs, _ = jax.vmap(
+            lambda p, r: solve_fractions(
+                p, objective=obj, risk_aversion=r, **solve_kw
+            )
+        )(params, ra)
+    elif obj.kind == "var_budget":
+        w = v0 * crit + 1e-12
+        budget = jnp.asarray(obj.var_budget, jnp.float32)
+        b_s = budget * w / jnp.sum(w)
+        solve_b = jax.vmap(
+            lambda p, b: solve_fractions(p, objective=obj, var_budget=b, **solve_kw)
+        )
+        fracs, st1 = solve_b(params, b_s)
+        # Reallocation round: non-binding stages (v clearly below their
+        # slice) donate their surplus to stages that clipped against theirs
+        # — spend the risk budget where it actually buys expected time.  A
+        # stage is donor OR receiver, never both, so the re-solve slices
+        # still sum to <= the end-to-end budget.
+        binding = st1.var >= 0.95 * b_s
+        surplus = jnp.sum(
+            jnp.where(binding, 0.0, jnp.maximum(b_s - st1.var, 0.0))
+        )
+        recv = binding.astype(jnp.float32) * w
+        extra = surplus * recv / jnp.maximum(jnp.sum(recv), 1e-12)
+        fracs, _ = solve_b(params, b_s + extra)
+    else:  # deadline
+        d = jnp.asarray(obj.deadline, jnp.float32)
+        d_s = d * e0 / jnp.maximum(through, 1e-9)  # sums to <= d on every path
+        fracs, _ = jax.vmap(
+            lambda p, ds: solve_fractions(p, objective=obj, deadline=ds, **solve_kw)
+        )(params, d_s)
+
+    stats = dag_stats(dag, fracs, params, obj, num_points=config.num_points)
+    return fracs, stats

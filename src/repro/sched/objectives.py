@@ -136,20 +136,35 @@ def evaluate(
     *,
     num_points: int = 512,
     smooth: bool = False,
+    risk_aversion=None,
+    var_budget=None,
+    deadline=None,
 ) -> Array:
     """Score one fraction vector (K,) on the simplex.  Lower is better.
 
     Pure and differentiable in ``fracs``; ``objective`` must be static under
     jit.  ``params`` is a ``frontier.UnitParams``.
+
+    ``risk_aversion`` / ``var_budget`` / ``deadline``, when given, override
+    the objective's static floats with (possibly traced) values — only the
+    KIND stays jit-static.  This is how the DAG partitioner hands each stage
+    its own slice of a shared risk budget or end-to-end deadline without one
+    compilation per stage (``sched.dag.propose_dag`` vmaps over stages).
     """
     from repro.core.frontier import completion_cdf, mean_var_completion
 
     if objective.needs_cdf():
-        p_meet = completion_cdf(
-            jnp.asarray(objective.deadline, fracs.dtype), fracs, params
-        )
+        d = objective.deadline if deadline is None else deadline
+        p_meet = completion_cdf(jnp.asarray(d, fracs.dtype), fracs, params)
         if smooth:
             return -jnp.log(jnp.maximum(p_meet, 1e-12))
         return -p_meet
     e_t, var = mean_var_completion(fracs, params, num_points)
-    return objective.score_moments(e_t, var, smooth=smooth)
+    return score_moments_dynamic(
+        objective.kind,
+        e_t,
+        var,
+        objective.risk_aversion if risk_aversion is None else risk_aversion,
+        objective.var_budget if var_budget is None else var_budget,
+        smooth=smooth,
+    )

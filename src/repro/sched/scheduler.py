@@ -60,7 +60,7 @@ class SchedulerState(NamedTuple):
 
     gibbs: gibbs.GibbsState  # per-worker posteriors, leaves (K, ...)
     ewma_ll: Array  # (K,) EWMA of negative predictive log-likelihood
-    ewma_count: Array  # scalar, number of anomaly updates folded in
+    ewma_count: Array  # (K,) anomaly updates folded into each worker's EWMA
     step: Array  # scalar, observe() calls so far
     key: Array  # scheduler-level PRNG key
 
@@ -105,9 +105,37 @@ def init(config: SchedulerConfig, num_workers: int, key: Array) -> SchedulerStat
     return SchedulerState(
         gibbs=fleet,
         ewma_ll=jnp.zeros((num_workers,), jnp.float32),
-        ewma_count=jnp.zeros((), jnp.int32),
+        ewma_count=jnp.zeros((num_workers,), jnp.int32),
         step=jnp.zeros((), jnp.int32),
         key=key,
+    )
+
+
+def advance_fleet(
+    fleet: gibbs.GibbsState,
+    times: Array,
+    fracs: Array,
+    config: SchedulerConfig,
+) -> Tuple[gibbs.GibbsState, Array]:
+    """The one fleet-advance path: discount -> fleet-native ``gibbs_batch``.
+
+    Shared by ``observe`` (flat K-worker fleet) and ``dag.observe_dag``
+    (stage-folded S*K fleet) so the estimation semantics cannot diverge.
+    Resolves ``config.use_pallas=None`` to the backend default.
+    """
+    use_pallas = config.use_pallas
+    if use_pallas is None:
+        from repro.kernels.ops import use_pallas_default
+
+        use_pallas = use_pallas_default()
+    fleet = gibbs.discount_state(fleet, config.discount)
+    return gibbs.gibbs_batch(
+        fleet,
+        times,
+        fracs,
+        n_iters=config.n_iters,
+        grid_size=config.grid_size,
+        use_pallas=use_pallas,
     )
 
 
@@ -127,21 +155,30 @@ def observe(
     auto-on for TPU backends) each sweep's grid posterior is ONE kernel
     launch covering every worker and both exponents.
     """
-    use_pallas = config.use_pallas
-    if use_pallas is None:
-        from repro.kernels.ops import use_pallas_default
-
-        use_pallas = use_pallas_default()
-    fleet = gibbs.discount_state(state.gibbs, config.discount)
-    fleet, ll = gibbs.gibbs_batch(
-        fleet,
-        telemetry.times,
-        telemetry.fracs,
-        n_iters=config.n_iters,
-        grid_size=config.grid_size,
-        use_pallas=use_pallas,
+    fleet, ll = advance_fleet(
+        state.gibbs, telemetry.times, telemetry.fracs, config
     )
     return state._replace(gibbs=fleet, step=state.step + 1), ll
+
+
+def unit_params_from_gibbs(
+    st: gibbs.GibbsState, *, use_samples: bool = False
+) -> UnitParams:
+    """Point estimates from a (possibly batched) ``GibbsState``.
+
+    Leaves of any leading shape pass through unchanged — (K,) for a fleet,
+    (S, K) for a stage-stacked workflow DAG.
+    """
+    if use_samples:
+        return UnitParams(mu=st.mu, sigma=st.sigma, alpha=st.alpha, beta=st.beta)
+    ng = st.ng
+    lam_mean = ng.nu0 / jnp.maximum(ng.psi0, 1e-30)
+    return UnitParams(
+        mu=ng.mu0,
+        sigma=1.0 / jnp.sqrt(jnp.maximum(lam_mean, 1e-30)),
+        alpha=st.alpha_prior.a / (st.alpha_prior.a + st.alpha_prior.b),
+        beta=st.beta_prior.a / (st.beta_prior.a + st.beta_prior.b),
+    )
 
 
 def unit_params(state: SchedulerState, *, use_samples: bool = False) -> UnitParams:
@@ -155,17 +192,7 @@ def unit_params(state: SchedulerState, *, use_samples: bool = False) -> UnitPara
     apparent speed by orders of magnitude and lock the fleet into a
     pathological split before the estimator ever sees real telemetry.
     """
-    st = state.gibbs
-    if use_samples:
-        return UnitParams(mu=st.mu, sigma=st.sigma, alpha=st.alpha, beta=st.beta)
-    ng = st.ng
-    lam_mean = ng.nu0 / jnp.maximum(ng.psi0, 1e-30)
-    return UnitParams(
-        mu=ng.mu0,
-        sigma=1.0 / jnp.sqrt(jnp.maximum(lam_mean, 1e-30)),
-        alpha=st.alpha_prior.a / (st.alpha_prior.a + st.alpha_prior.b),
-        beta=st.beta_prior.a / (st.beta_prior.a + st.beta_prior.b),
-    )
+    return unit_params_from_gibbs(state.gibbs, use_samples=use_samples)
 
 
 def _equalizing_fractions(params: UnitParams) -> Array:
@@ -211,6 +238,9 @@ def solve_fractions(
     lr: float = 0.05,
     num_points: int = 512,
     min_fraction: float = 5e-3,
+    risk_aversion=None,
+    var_budget=None,
+    deadline=None,
 ) -> Tuple[Array, ProposeStats]:
     """Objective-optimal fractions on the K-simplex (see module docstring).
 
@@ -220,8 +250,16 @@ def solve_fractions(
     update — one near-zero assignment could poison a worker's posterior
     (kappa -> 1e9 at a garbage mu) beyond recovery.
 
+    ``risk_aversion`` / ``var_budget`` / ``deadline`` optionally override the
+    objective's static parameter floats with traced values (see
+    ``objectives.evaluate``) — the DAG partitioner uses this to vmap one
+    compiled solve across stages that each own a different budget slice.
+
     Returns (fractions, ProposeStats).  Jit-compatible; ``objective`` static.
     """
+    overrides = dict(
+        risk_aversion=risk_aversion, var_budget=var_budget, deadline=deadline
+    )
     f_eq = _equalizing_fractions(params)
     k = f_eq.shape[0]
     f_uni = jnp.full((k,), 1.0 / k, f_eq.dtype)
@@ -229,7 +267,8 @@ def solve_fractions(
     def smooth_loss(logits):
         fracs = jax.nn.softmax(logits)
         return evaluate(
-            objective, fracs, params, num_points=num_points, smooth=True
+            objective, fracs, params, num_points=num_points, smooth=True,
+            **overrides,
         )
 
     grad = jax.grad(smooth_loss)
@@ -255,7 +294,9 @@ def solve_fractions(
     cands = jnp.maximum(cands, min_fraction)
     cands = cands / jnp.sum(cands, axis=-1, keepdims=True)
     scores = jax.vmap(
-        lambda f: evaluate(objective, f, params, num_points=num_points)
+        lambda f: evaluate(
+            objective, f, params, num_points=num_points, **overrides
+        )
     )(cands)
     best = cands[jnp.argmin(scores)]
 
@@ -283,36 +324,80 @@ def anomaly(
     state: SchedulerState,
     telemetry: Telemetry,
     config: SchedulerConfig = SchedulerConfig(),
+    valid: Optional[Array] = None,
 ) -> Tuple[SchedulerState, Array]:
     """EWMA'd negative posterior-predictive log-likelihood per worker.
 
     High score == recent behaviour inconsistent with the learned model.
     Accepts (K,) single observations or (K, N) batches (averaged over N).
+
+    Freshness is tracked PER WORKER (``ewma_count`` is (K,)): a worker
+    admitted after the fleet's first update still gets its EWMA initialized
+    at its own first score instead of blended with the zero placeholder —
+    the fleet-global scalar used to bias new workers "healthy" and delay
+    straggler detection by several EWMA half-lives.
+
+    ``valid`` optionally masks observations (per worker (K,) or per element,
+    same shape as ``times``): invalid telemetry — e.g. the non-finite times
+    of a hard-failed worker — never touches any EWMA or freshness counter.
     """
     p = unit_params(state)
     lam_mean = 1.0 / jnp.maximum(p.sigma * p.sigma, 1e-30)
     t = jnp.asarray(telemetry.times)
     f = jnp.asarray(telemetry.fracs)
+    if valid is None:
+        v = jnp.ones(t.shape, jnp.float32)
+    else:
+        v = jnp.asarray(valid, jnp.float32)
+        if v.ndim < t.ndim:  # per-worker (K,) mask over a (K, N) batch
+            v = v[..., None]
+        v = jnp.broadcast_to(v, t.shape)
+    # Invalid slots get interior dummy values so inf/nan never reaches the
+    # logpdf (0 * inf = nan would leak through the mask otherwise).
+    t = jnp.where(v > 0, t, 1.0)
+    f = jnp.where(v > 0, f, 0.5)
     ll = jax.vmap(posterior_predictive_logpdf)(
         t, f, p.mu, lam_mean, p.alpha, p.beta
     )
     if ll.ndim > 1:
-        ll = jnp.mean(ll, axis=-1)
+        n_valid = jnp.sum(v, axis=-1)
+        ll = jnp.sum(ll * v, axis=-1) / jnp.maximum(n_valid, 1.0)
+        worker_valid = n_valid > 0
+    else:
+        worker_valid = v > 0
     score = -ll
     fresh = state.ewma_count == 0
-    new_ewma = jnp.where(
+    blended = jnp.where(
         fresh, score, config.ewma * state.ewma_ll + (1.0 - config.ewma) * score
     )
-    state = state._replace(ewma_ll=new_ewma, ewma_count=state.ewma_count + 1)
+    new_ewma = jnp.where(worker_valid, blended, state.ewma_ll)
+    state = state._replace(
+        ewma_ll=new_ewma,
+        ewma_count=state.ewma_count + worker_valid.astype(state.ewma_count.dtype),
+    )
     return state, new_ewma
 
 
 @jax.jit
-def flag_stragglers(scores: Array, threshold_sigma: float = 3.0) -> Array:
-    """Workers whose anomaly score is a robust outlier vs the fleet."""
-    med = jnp.median(scores)
-    mad = jnp.median(jnp.abs(scores - med)) + 1e-9
-    return scores > med + threshold_sigma * 1.4826 * mad
+def flag_stragglers(
+    scores: Array, threshold_sigma: float = 3.0, valid: Optional[Array] = None
+) -> Array:
+    """Workers whose anomaly score is a robust outlier vs the fleet.
+
+    ``valid`` optionally excludes workers (hard failures, just-admitted
+    members) from the median/MAD baseline — a dead worker's stale or
+    corrupted score must not skew the statistics the LIVE fleet is judged
+    against — and excluded workers are never flagged.
+    """
+    if valid is None:
+        med = jnp.median(scores)
+        mad = jnp.median(jnp.abs(scores - med)) + 1e-9
+        return scores > med + threshold_sigma * 1.4826 * mad
+    v = jnp.asarray(valid, bool)
+    masked = jnp.where(v, scores, jnp.nan)
+    med = jnp.nanmedian(masked)
+    mad = jnp.nanmedian(jnp.where(v, jnp.abs(scores - med), jnp.nan)) + 1e-9
+    return v & (scores > med + threshold_sigma * 1.4826 * mad)
 
 
 # --------------------------------------------------------------------------
@@ -329,6 +414,7 @@ def remove_workers(state: SchedulerState, dead: np.ndarray) -> SchedulerState:
     return state._replace(
         gibbs=jax.tree_util.tree_map(take, state.gibbs),
         ewma_ll=take(state.ewma_ll),
+        ewma_count=take(state.ewma_count),
     )
 
 
@@ -357,6 +443,11 @@ def add_workers(
     return state._replace(
         gibbs=jax.tree_util.tree_map(cat, state.gibbs, fresh),
         ewma_ll=jnp.concatenate([jnp.asarray(state.ewma_ll), jnp.zeros(count)]),
+        # Fresh admits carry ewma_count=0, so their first anomaly score seeds
+        # the EWMA directly (per-worker freshness — see ``anomaly``).
+        ewma_count=jnp.concatenate(
+            [jnp.asarray(state.ewma_count), jnp.zeros(count, jnp.int32)]
+        ),
         key=key,
     )
 
@@ -427,16 +518,23 @@ class Scheduler:
         )
 
     # -- anomaly / straggler detection -------------------------------------
-    def anomaly_scores(self, fracs, times) -> np.ndarray:
+    def anomaly_scores(self, fracs, times, valid=None) -> np.ndarray:
         self.state, scores = anomaly(
             self.state,
             Telemetry(fracs=jnp.asarray(fracs), times=jnp.asarray(times)),
             self.config,
+            None if valid is None else jnp.asarray(valid),
         )
         return np.asarray(scores, np.float64)
 
-    def flag_stragglers(self, threshold_sigma: float = 3.0) -> np.ndarray:
-        return np.asarray(flag_stragglers(self.state.ewma_ll, threshold_sigma))
+    def flag_stragglers(self, threshold_sigma: float = 3.0, valid=None) -> np.ndarray:
+        return np.asarray(
+            flag_stragglers(
+                self.state.ewma_ll,
+                threshold_sigma,
+                None if valid is None else jnp.asarray(valid),
+            )
+        )
 
     # -- elastic membership ------------------------------------------------
     def remove_workers(self, dead: np.ndarray) -> None:

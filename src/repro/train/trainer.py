@@ -144,11 +144,18 @@ class Trainer:
         try:
             restored, extra = self.ckpt.restore(self._ckpt_tree())
         except ValueError:
-            # Checkpoint written with a different scheduler configuration
-            # (legacy, partitioner toggled, ...): model state is still good.
-            restored, extra = self.ckpt.restore(
-                {"params": self.params, "opt_state": self.opt_state}
-            )
+            # Checkpoint structure drifted (partitioner toggled, legacy
+            # scheduler state layout, ...): the model-only restore still
+            # works when the checkpoint was written without scheduler
+            # leaves.  If the array layout cannot satisfy even that (e.g.
+            # the checkpoint HAS scheduler leaves of an old shape), the
+            # checkpoint is unusable — start fresh rather than crash.
+            try:
+                restored, extra = self.ckpt.restore(
+                    {"params": self.params, "opt_state": self.opt_state}
+                )
+            except ValueError:
+                return False
         self.params = restored["params"]
         self.opt_state = restored["opt_state"]
         sched_state = restored.get("sched")

@@ -1,0 +1,363 @@
+"""Stage-structured workflow DAGs: stacked (S, K, N) estimation, serial /
+parallel composition of completion moments, and stage-wise partitioning."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sched
+from repro.core import frontier, gibbs
+from repro.core.frontier import UnitParams
+
+S, K, N = 3, 4, 48
+CFG = sched.SchedulerConfig(n_iters=6, grid_size=64, mu_guess=15.0, opt_steps=60)
+
+
+def _pipeline_telemetry(seed=0, n=N, true_mu=None):
+    """Synthetic (S, K, N) telemetry for a 3-stage x 4-worker pipeline."""
+    rng = np.random.default_rng(seed)
+    if true_mu is None:
+        true_mu = rng.uniform(5.0, 30.0, (S, K)).astype(np.float32)
+    f = rng.uniform(0.05, 0.95, (S, K, n)).astype(np.float32)
+    t = np.maximum(
+        f**0.9 * true_mu[..., None] + 0.3 * rng.normal(size=(S, K, n)), 1e-3
+    ).astype(np.float32)
+    return jnp.asarray(t), jnp.asarray(f), true_mu
+
+
+# --------------------------------------------------------------------------
+# topology
+# --------------------------------------------------------------------------
+def test_dag_validates_topological_numbering():
+    with pytest.raises(ValueError):
+        sched.WorkflowDAG(preds=((1,), ()), num_workers=2)  # pred >= index
+    with pytest.raises(ValueError):
+        sched.WorkflowDAG(preds=((0,), ()), num_workers=2)  # self-loop
+    chain = sched.WorkflowDAG.chain(4, 3)
+    assert chain.num_stages == 4 and chain.is_chain and chain.sinks == (3,)
+
+
+def test_dag_from_edges_diamond():
+    #     1
+    #   /   \
+    #  0     3
+    #   \   /
+    #     2
+    dag = sched.WorkflowDAG.from_edges(
+        4, ((0, 1), (0, 2), (1, 3), (2, 3)), num_workers=2
+    )
+    assert dag.preds == ((), (0,), (0,), (1, 2))
+    assert not dag.is_chain
+    assert dag.sinks == (3,)
+    assert dag.succs(0) == (1, 2)
+
+
+def test_critical_path_lengths():
+    dag = sched.WorkflowDAG.from_edges(
+        4, ((0, 1), (0, 2), (1, 3), (2, 3)), num_workers=2
+    )
+    means = jnp.asarray([1.0, 5.0, 2.0, 1.0])
+    through, crit = sched.path_lengths(dag, means)
+    np.testing.assert_allclose(np.asarray(through), [7.0, 7.0, 4.0, 7.0])
+    assert float(crit) == 7.0
+
+
+# --------------------------------------------------------------------------
+# stacked estimation
+# --------------------------------------------------------------------------
+def test_stacked_estimation_matches_per_stage_calls():
+    """ISSUE acceptance: one stacked (S*K)-fleet gibbs_batch bitwise-matches
+    S independent per-stage gibbs_batch calls on the corresponding state
+    slices — folding the stage axis into the fleet axis changes nothing."""
+    t, f, _ = _pipeline_telemetry(seed=1)
+    keys = jax.random.split(jax.random.PRNGKey(5), S * K)
+    init_flat = jax.vmap(gibbs.init_state)(keys)
+
+    stacked, ll_stacked = gibbs.gibbs_batch(
+        init_flat, t.reshape(S * K, N), f.reshape(S * K, N),
+        n_iters=5, grid_size=64,
+    )
+    for si in range(S):
+        sl = slice(si * K, (si + 1) * K)
+        ref, ll_ref = gibbs.gibbs_batch(
+            jax.tree_util.tree_map(lambda x: x[sl], init_flat),
+            t[si], f[si], n_iters=5, grid_size=64,
+        )
+        got = jax.tree_util.tree_map(lambda x: x[sl], stacked)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(ll_stacked[sl]), np.asarray(ll_ref))
+
+
+def test_fit_dag_recovers_stage_parameters():
+    """One fit_dag call (no Python loop over stages) estimates the whole
+    3-stage x 4-worker pipeline."""
+    t, f, true_mu = _pipeline_telemetry(seed=2, n=96)
+    states, ll = gibbs.fit_dag(jax.random.PRNGKey(0), t, f, n_iters=8, grid_size=96)
+    assert states.mu.shape == (S, K)
+    assert ll.shape == (S, K)
+    # posterior means land near the true per-stage-per-worker speeds
+    np.testing.assert_allclose(np.asarray(states.ng.mu0), true_mu, rtol=0.25)
+
+
+def test_fit_dag_matches_fit_fleet_on_folded_axes():
+    """fit_dag == fit_fleet on the stage-folded telemetry (same key): the
+    stacked program IS the fleet program."""
+    t, f, _ = _pipeline_telemetry(seed=3)
+    key = jax.random.PRNGKey(9)
+    st_dag, ll_dag = gibbs.fit_dag(key, t, f, n_iters=5, grid_size=64)
+    st_fleet, ll_fleet = gibbs.fit_fleet(
+        key, t.reshape(S * K, N), f.reshape(S * K, N), n_iters=5, grid_size=64
+    )
+    for a, b in zip(jax.tree_util.tree_leaves(st_dag),
+                    jax.tree_util.tree_leaves(st_fleet)):
+        np.testing.assert_array_equal(
+            np.asarray(a).reshape(np.asarray(b).shape), np.asarray(b)
+        )
+    np.testing.assert_array_equal(
+        np.asarray(ll_dag).reshape(-1), np.asarray(ll_fleet)
+    )
+
+
+def test_fit_dag_pallas_parity():
+    """Acceptance: the stacked program through the fused kernel (interpret
+    mode on CPU) matches the oracle path to <= 1e-4."""
+    t, f, _ = _pipeline_telemetry(seed=4)
+    key = jax.random.PRNGKey(2)
+    st_ref, _ = gibbs.fit_dag(key, t, f, n_iters=5, grid_size=64, use_pallas=False)
+    st_pal, _ = gibbs.fit_dag(key, t, f, n_iters=5, grid_size=64, use_pallas=True)
+    np.testing.assert_allclose(
+        np.asarray(st_ref.ng.mu0), np.asarray(st_pal.ng.mu0), rtol=1e-4, atol=1e-4
+    )
+    mean = lambda p: np.asarray(p.a / (p.a + p.b))
+    np.testing.assert_allclose(
+        mean(st_ref.alpha_prior), mean(st_pal.alpha_prior), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_observe_dag_jits_and_advances():
+    t, f, _ = _pipeline_telemetry(seed=5)
+    dag = sched.WorkflowDAG.chain(S, K)
+    state = sched.init_dag(CFG, dag, jax.random.PRNGKey(1))
+    assert state.gibbs.mu.shape == (S, K)
+
+    @jax.jit
+    def step(st, telem):
+        return sched.observe_dag(st, telem, CFG)
+
+    state2, ll = step(state, sched.Telemetry(fracs=f, times=t))
+    assert int(state2.step) == 1
+    assert ll.shape == (S, K) and bool(jnp.all(jnp.isfinite(ll)))
+
+
+# --------------------------------------------------------------------------
+# composition
+# --------------------------------------------------------------------------
+def test_chain_moments_match_monte_carlo():
+    """ISSUE acceptance: chain-composed (E, Var) matches Monte-Carlo of
+    summed stage makespans to <= 1e-2 relative."""
+    rng = np.random.default_rng(7)
+    params = UnitParams.of(
+        rng.uniform(8.0, 25.0, (S, K)).astype(np.float32),
+        rng.uniform(0.5, 2.0, (S, K)).astype(np.float32),
+    )
+    fracs = jnp.full((S, K), 1.0 / K, jnp.float32)
+    stage_e, stage_v = jax.vmap(
+        lambda fr, p: frontier.mean_var_completion(fr, p, 2048)
+    )(fracs, params)
+    e_chain, v_chain = frontier.serial_moments(stage_e, stage_v)
+
+    n_mc = 400_000
+    total = np.zeros(n_mc)
+    for si in range(S):
+        mean, std = frontier.component_mean_std(fracs[si], jax.tree_util.tree_map(lambda x: x[si], params))
+        draws = rng.normal(
+            np.asarray(mean), np.asarray(std), size=(n_mc, K)
+        )
+        total += draws.max(axis=1)
+    np.testing.assert_allclose(float(e_chain), total.mean(), rtol=1e-2)
+    np.testing.assert_allclose(float(v_chain), total.var(), rtol=5e-2)
+
+
+def test_parallel_max_moments_match_monte_carlo():
+    rng = np.random.default_rng(8)
+    means = jnp.asarray([10.0, 12.0, 9.0])
+    variances = jnp.asarray([4.0, 1.0, 9.0])
+    e_q, v_q = frontier.parallel_max_moments(means, variances, 2048)
+    draws = rng.normal(
+        np.asarray(means), np.sqrt(np.asarray(variances)), size=(400_000, 3)
+    ).max(axis=1)
+    np.testing.assert_allclose(float(e_q), draws.mean(), rtol=1e-2)
+    np.testing.assert_allclose(float(v_q), draws.var(), rtol=5e-2)
+
+
+def test_dag_moments_chain_reduces_to_serial_sum():
+    preds = sched.WorkflowDAG.chain(S, K).preds
+    stage_e = jnp.asarray([3.0, 5.0, 2.0])
+    stage_v = jnp.asarray([0.5, 0.2, 0.1])
+    e_dag, v_dag = frontier.dag_completion_moments(preds, stage_e, stage_v)
+    np.testing.assert_allclose(float(e_dag), 10.0, rtol=1e-6)
+    np.testing.assert_allclose(float(v_dag), 0.8, rtol=1e-6)
+
+
+def test_dag_moments_diamond_matches_monte_carlo():
+    """Fork/join: end-to-end = t0 + max(t1, t2) + t3 (PERT independence)."""
+    dag = sched.WorkflowDAG.from_edges(
+        4, ((0, 1), (0, 2), (1, 3), (2, 3)), num_workers=2
+    )
+    stage_e = jnp.asarray([4.0, 6.0, 5.0, 3.0])
+    stage_v = jnp.asarray([0.4, 1.0, 2.0, 0.3])
+    e_dag, v_dag = frontier.dag_completion_moments(dag.preds, stage_e, stage_v, num_points=2048)
+    rng = np.random.default_rng(9)
+    n_mc = 400_000
+    t_s = rng.normal(
+        np.asarray(stage_e), np.sqrt(np.asarray(stage_v)), size=(n_mc, 4)
+    )
+    # exact fork/join: branches share t0 (positively correlated)
+    total = t_s[:, 0] + np.maximum(t_s[:, 1], t_s[:, 2]) + t_s[:, 3]
+    np.testing.assert_allclose(float(e_dag), total.mean(), rtol=1e-2)
+    # the reduction's own model: branch finishes treated independent (PERT)
+    fin1 = rng.normal(float(stage_e[0] + stage_e[1]),
+                      float(jnp.sqrt(stage_v[0] + stage_v[1])), n_mc)
+    fin2 = rng.normal(float(stage_e[0] + stage_e[2]),
+                      float(jnp.sqrt(stage_v[0] + stage_v[2])), n_mc)
+    pert = np.maximum(fin1, fin2) + t_s[:, 3]
+    np.testing.assert_allclose(float(e_dag), pert.mean(), rtol=1e-2)
+    np.testing.assert_allclose(float(v_dag), pert.var(), rtol=5e-2)
+    # PERT independence errs conservative on the mean vs the correlated truth
+    assert float(e_dag) >= total.mean() - 0.05
+
+
+# --------------------------------------------------------------------------
+# partitioning
+# --------------------------------------------------------------------------
+def test_propose_dag_beats_uniform_end_to_end():
+    """ISSUE acceptance: stage-wise Bayesian splits achieve lower expected
+    end-to-end completion than uniform splits (evaluated at TRUE params)."""
+    rng = np.random.default_rng(10)
+    true_mu = np.stack([  # heterogeneous: each stage has a 4x speed spread
+        rng.permutation([4.0, 8.0, 16.0, 24.0]) for _ in range(S)
+    ]).astype(np.float32)
+    t, f, _ = _pipeline_telemetry(seed=10, n=96, true_mu=true_mu)
+    dag = sched.WorkflowDAG.chain(S, K)
+    state = sched.init_dag(CFG, dag, jax.random.PRNGKey(3))
+    for _ in range(3):
+        state, _ = sched.observe_dag(state, sched.Telemetry(fracs=f, times=t), CFG)
+
+    fracs, stats = sched.propose_dag(state, dag, CFG)
+    assert fracs.shape == (S, K)
+    np.testing.assert_allclose(np.asarray(fracs.sum(-1)), 1.0, atol=1e-5)
+
+    true_params = UnitParams.of(true_mu, np.full((S, K), 1.0, np.float32),
+                                np.full((S, K), 0.9, np.float32),
+                                np.full((S, K), 0.9, np.float32))
+    e_bayes = sched.dag_stats(dag, fracs, true_params).e_t
+    e_uni = sched.dag_stats(dag, sched.uniform_fractions(dag), true_params).e_t
+    assert float(e_bayes) < float(e_uni)
+    # each stage shifts work toward its faster workers
+    for si in range(S):
+        assert float(fracs[si, np.argmin(true_mu[si])]) > float(
+            fracs[si, np.argmax(true_mu[si])]
+        )
+
+
+def test_propose_dag_var_budget_allocates_across_stages():
+    """A feasible end-to-end variance budget is met by stage-wise allocation,
+    paying expected time relative to the unconstrained optimum."""
+    t, f, _ = _pipeline_telemetry(seed=11, n=96)
+    dag = sched.WorkflowDAG.chain(S, K)
+    state = sched.init_dag(CFG, dag, jax.random.PRNGKey(4))
+    for _ in range(2):
+        state, _ = sched.observe_dag(state, sched.Telemetry(fracs=f, times=t), CFG)
+
+    _, st_mean = sched.propose_dag(state, dag, CFG)
+    # min achievable variance: drive var_budget -> 0 (every stage clips)
+    cfg0 = dataclasses.replace(
+        CFG, objective=sched.Objective.variance_budget(1e-8)
+    )
+    _, st_min = sched.propose_dag(state, dag, cfg0)
+    budget = 0.5 * (float(st_min.var) + float(st_mean.var))  # strictly feasible
+
+    cfg_b = dataclasses.replace(
+        CFG, objective=sched.Objective.variance_budget(budget)
+    )
+    fr_b, st_b = sched.propose_dag(state, dag, cfg_b)
+    # donor/receiver slices sum to <= budget, so the composed variance meets
+    # it up to quadrature error
+    assert float(st_b.var) <= budget * 1.01
+    assert float(st_b.e_t) >= float(st_mean.e_t) - 1e-5
+
+
+def test_propose_dag_critical_path_spends_risk_where_it_hurts():
+    """On a diamond, the long branch is critical: the critical-path-aware
+    mean_var split tolerates more variance on the slack branch than the
+    uniform-risk split does — risk budget goes where latency lives."""
+    rng = np.random.default_rng(12)
+    true_mu = np.stack([
+        [5.0, 10.0], [40.0, 60.0], [4.0, 6.0], [5.0, 8.0]
+    ]).astype(np.float32)  # stage 1 dominates; stage 2 is the slack branch
+    dag = sched.WorkflowDAG.from_edges(
+        4, ((0, 1), (0, 2), (1, 3), (2, 3)), num_workers=2
+    )
+    f = rng.uniform(0.05, 0.95, (4, 2, 96)).astype(np.float32)
+    t = np.maximum(
+        f**0.9 * true_mu[..., None] + 0.5 * rng.normal(size=(4, 2, 96)), 1e-3
+    ).astype(np.float32)
+    cfg = dataclasses.replace(CFG, objective=sched.Objective.mean_var(2.0))
+    state = sched.init_dag(cfg, dag, jax.random.PRNGKey(6))
+    for _ in range(2):
+        state, _ = sched.observe_dag(
+            state, sched.Telemetry(fracs=jnp.asarray(f), times=jnp.asarray(t)), cfg
+        )
+
+    _, st_cp = sched.propose_dag(state, dag, cfg, critical_path_aware=True)
+    _, st_flat = sched.propose_dag(state, dag, cfg, critical_path_aware=False)
+    # both meet the same API; the critical-path variant never pays MORE
+    # end-to-end expected time to suppress slack-branch variance
+    assert float(st_cp.e_t) <= float(st_flat.e_t) + 1e-3
+    assert np.isfinite(float(st_cp.var)) and np.isfinite(float(st_flat.var))
+
+
+def test_propose_dag_deadline_lower_bound_is_valid():
+    """Per-stage deadline slices sum to <= d along every path, so the
+    composed completion must meet the deadline at least as often as the
+    per-stage product bound suggests (checked by Monte Carlo)."""
+    t, f, true_mu = _pipeline_telemetry(seed=13, n=96)
+    dag = sched.WorkflowDAG.chain(S, K)
+    state = sched.init_dag(CFG, dag, jax.random.PRNGKey(8))
+    for _ in range(2):
+        state, _ = sched.observe_dag(state, sched.Telemetry(fracs=f, times=t), CFG)
+    _, st_mean = sched.propose_dag(state, dag, CFG)
+
+    deadline = 1.15 * float(st_mean.e_t)
+    cfg_d = dataclasses.replace(
+        CFG, objective=sched.Objective.deadline_quantile(deadline)
+    )
+    fr_d, st_d = sched.propose_dag(state, dag, cfg_d)
+    np.testing.assert_allclose(np.asarray(fr_d.sum(-1)), 1.0, atol=1e-5)
+    # score is -P(T <= d) under the Normal-matched composition: a probability
+    assert -1.0 - 1e-6 <= float(st_d.score) <= 0.0
+
+
+def test_kernel_reshape_shim_folds_stage_axes():
+    """ops.posterior_grid_fleet accepts stacked (S, K, N) blocks and matches
+    the unified oracle on every stage."""
+    from repro.core.moments import BetaParams, exponent_grid, log_posterior_grid
+    from repro.kernels import ops
+
+    t, f, _ = _pipeline_telemetry(seed=14, n=32)
+    rng = np.random.default_rng(14)
+    mu = jnp.asarray(rng.uniform(5, 25, (S, K)).astype(np.float32))
+    lam = jnp.asarray(rng.uniform(0.5, 2.0, (S, K)).astype(np.float32))
+    alpha = jnp.full((S, K), 0.8, jnp.float32)
+    beta = jnp.full((S, K), 0.7, jnp.float32)
+    prior = BetaParams(jnp.full((S, K), 2.0), jnp.full((S, K), 2.0))
+    grid = exponent_grid(64)
+
+    out = ops.posterior_grid_fleet(grid, t, f, mu, lam, alpha, beta, prior, prior)
+    assert out.shape == (S, K, 2, 64)
+    oracle = log_posterior_grid(grid, t, f, mu, lam, alpha, beta, prior, prior)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,82 @@
+"""FaultToleranceMonitor: hard failures must never corrupt the soft-anomaly
+statistics (regression for the fabricated-1e6 bug)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sched
+from repro.distributed.fault_tolerance import FaultToleranceMonitor
+
+CFG = sched.SchedulerConfig(n_iters=6, grid_size=64, mu_guess=5.0, opt_steps=40)
+
+
+def _warm_scheduler(k=4, steps=3, seed=0):
+    rng = np.random.default_rng(seed)
+    part = sched.Scheduler(k, config=CFG, seed=seed)
+    for _ in range(steps):
+        fr = np.full((k, 16), 1.0 / k, np.float32)
+        t = np.abs(rng.normal(5.0, 0.3, (k, 16))).astype(np.float32)
+        part.observe(sched.Telemetry(jnp.asarray(fr), jnp.asarray(t)))
+    return part, rng
+
+
+def test_hard_failure_never_enters_soft_anomaly_stats():
+    """Regression: a worker reporting inf used to be fed to anomaly_scores
+    as a fabricated 1e6 observation, permanently corrupting its EWMA and
+    skewing the fleet median/MAD.  Now non-finite telemetry is masked out:
+    the dead worker's EWMA is untouched and the live fleet's scores match a
+    run that never saw the failure."""
+    part, rng = _warm_scheduler()
+    mon = FaultToleranceMonitor(part, heartbeat_timeout=1e9)
+    fr = np.full(4, 0.25)
+    base = np.abs(rng.normal(5.0, 0.3, 4))
+    mon.observe_step(fr, base, now=0.0)
+    ewma_before = np.asarray(part.state.ewma_ll).copy()
+
+    dead_times = base.copy()
+    dead_times[1] = np.inf
+    out = mon.observe_step(fr, dead_times, now=1.0)
+    assert out["failures"][1]
+    assert not out["stragglers"][1]  # failed, not straggling
+
+    # the dead worker's EWMA and freshness counter are frozen
+    np.testing.assert_allclose(float(part.state.ewma_ll[1]), ewma_before[1])
+    # live workers' scores stay finite and uncorrupted
+    assert np.isfinite(np.asarray(part.state.ewma_ll)).all()
+    assert float(part.state.ewma_ll.max()) < 1e3
+
+
+def test_live_fleet_scores_match_failure_free_run():
+    """The surviving workers' anomaly statistics must be bit-identical
+    whether or not a dead peer reported inf alongside them."""
+    part_a, rng_a = _warm_scheduler(seed=1)
+    part_b, _ = _warm_scheduler(seed=1)
+    fr = np.full(4, 0.25)
+    times = np.abs(rng_a.normal(5.0, 0.3, 4))
+
+    mon_a = FaultToleranceMonitor(part_a, heartbeat_timeout=1e9)
+    mon_b = FaultToleranceMonitor(part_b, heartbeat_timeout=1e9)
+    mon_a.observe_step(fr, times, now=0.0)
+    broken = times.copy()
+    broken[2] = np.nan
+    mon_b.observe_step(fr, broken, now=0.0)
+
+    a = np.asarray(part_a.state.ewma_ll)
+    b = np.asarray(part_b.state.ewma_ll)
+    keep = [0, 1, 3]
+    np.testing.assert_array_equal(a[keep], b[keep])
+
+
+def test_straggler_detection_survives_concurrent_failure():
+    """A slow-but-alive worker is still flagged while another worker is hard
+    down — the failure no longer inflates the MAD baseline."""
+    part, rng = _warm_scheduler(k=5, seed=2)
+    mon = FaultToleranceMonitor(part, heartbeat_timeout=1e9, straggler_sigma=2.0)
+    fr = np.full(5, 0.2)
+    for step in range(4):
+        times = np.abs(rng.normal(5.0, 0.3, 5))
+        times[3] *= 6.0  # persistent straggler
+        times[4] = np.inf  # hard failure alongside
+        out = mon.observe_step(fr, times, now=float(step))
+    assert out["failures"][4]
+    assert out["stragglers"][3]
+    assert not out["stragglers"][4]

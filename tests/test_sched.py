@@ -83,6 +83,22 @@ def test_checkpoint_roundtrip_bit_exact(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_legacy_checkpoint_shape_drift_raises(tmp_path):
+    """A checkpoint written with the old fleet-global scalar ``ewma_count``
+    must fail restore with ValueError (leaf shape drift), so the trainer's
+    legacy fallback path — model-only restore, fresh scheduler beliefs —
+    triggers instead of a silent wrong-shape restore crashing mid-run at the
+    first eviction."""
+    import pytest
+
+    state = sched.init(CFG, 3, jax.random.PRNGKey(0))
+    legacy = state._replace(ewma_count=jnp.zeros((), jnp.int32))
+    ckpt = CheckpointManager(str(tmp_path), async_write=False)
+    ckpt.save(0, legacy)
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(sched.init(CFG, 3, jax.random.PRNGKey(0)))
+
+
 def test_restored_trajectory_matches_unrestored(tmp_path):
     """observe -> propose after restore reproduces the unrestored run."""
     rng = np.random.default_rng(2)
@@ -187,6 +203,100 @@ def test_anomaly_flags_degraded_worker():
     scores = np.asarray(scores)
     assert scores[2] == scores.max()
     assert bool(np.asarray(sched.flag_stragglers(state.ewma_ll, 2.0))[2])
+
+
+def test_admitted_worker_ewma_seeds_at_first_score():
+    """Regression: freshness is per worker.  A worker admitted AFTER the
+    fleet's first anomaly update must have its EWMA initialized at its own
+    first score — the old fleet-global ``ewma_count`` blended it with the
+    zero placeholder, biasing fresh admits "healthy" and delaying straggler
+    detection."""
+    state = sched.init(CFG, 3, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        fr = np.full((3, 8), 1 / 3, np.float32)
+        t = np.abs(rng.normal(5.0, 0.3, (3, 8))).astype(np.float32)
+        state, _ = sched.observe(
+            state, sched.Telemetry(jnp.asarray(fr), jnp.asarray(t)), CFG
+        )
+    state, _ = sched.anomaly(
+        state, sched.Telemetry(jnp.full(3, 1 / 3), jnp.full(3, 5.0)), CFG
+    )
+    assert np.asarray(state.ewma_count).shape == (3,)
+
+    state = sched.add_workers(state, 1, CFG)
+    assert int(state.ewma_count[3]) == 0  # fresh admit
+
+    # the admit runs 10x slower than the incumbent fleet's behaviour
+    times = jnp.asarray([5.0, 5.0, 5.0, 50.0])
+    state, scores = sched.anomaly(
+        state, sched.Telemetry(jnp.full(4, 0.25), times), CFG
+    )
+    # EWMA == raw first score for the admit (no zero-blend): recompute it
+    p = sched.unit_params(state)
+    from repro.core.posterior import posterior_predictive_logpdf
+
+    raw = -float(
+        posterior_predictive_logpdf(
+            times[3], jnp.asarray(0.25), p.mu[3],
+            1.0 / jnp.maximum(p.sigma[3] ** 2, 1e-30), p.alpha[3], p.beta[3],
+        )
+    )
+    np.testing.assert_allclose(float(scores[3]), raw, rtol=1e-5)
+    # and the straggling admit is flaggable immediately, not EWMA-lagged
+    assert bool(np.asarray(sched.flag_stragglers(state.ewma_ll, 2.0))[3])
+
+
+def test_anomaly_valid_mask_freezes_failed_worker():
+    """Invalid telemetry (hard failures) must leave both the EWMA and the
+    freshness counter of the failed worker untouched."""
+    state = sched.init(CFG, 3, jax.random.PRNGKey(4))
+    rng = np.random.default_rng(6)
+    for _ in range(2):
+        fr = np.full((3, 8), 1 / 3, np.float32)
+        t = np.abs(rng.normal(5.0, 0.3, (3, 8))).astype(np.float32)
+        state, _ = sched.observe(
+            state, sched.Telemetry(jnp.asarray(fr), jnp.asarray(t)), CFG
+        )
+    state, _ = sched.anomaly(
+        state, sched.Telemetry(jnp.full(3, 1 / 3), jnp.full(3, 5.0)), CFG
+    )
+    before_ewma = np.asarray(state.ewma_ll).copy()
+    before_count = np.asarray(state.ewma_count).copy()
+
+    times = jnp.asarray([5.0, np.inf, 5.0])
+    valid = jnp.asarray([True, False, True])
+    state, scores = sched.anomaly(
+        state, sched.Telemetry(jnp.full(3, 1 / 3), times), CFG, valid
+    )
+    assert np.isfinite(np.asarray(scores)).all()
+    np.testing.assert_array_equal(float(state.ewma_ll[1]), before_ewma[1])
+    assert int(state.ewma_count[1]) == int(before_count[1])
+    assert int(state.ewma_count[0]) == int(before_count[0]) + 1
+
+    # a per-worker (K,) mask also applies to a batched (K, N) telemetry
+    tb = jnp.stack([jnp.full(4, 5.0), jnp.full(4, jnp.inf), jnp.full(4, 5.0)])
+    frozen = float(state.ewma_ll[1])
+    state, scores = sched.anomaly(
+        state, sched.Telemetry(jnp.full((3, 4), 1 / 3), tb), CFG, valid
+    )
+    assert np.isfinite(np.asarray(scores)).all()
+    np.testing.assert_array_equal(float(state.ewma_ll[1]), frozen)
+
+
+def test_flag_stragglers_valid_mask_excludes_dead_from_baseline():
+    """A dead worker's huge stale score must not inflate the median/MAD the
+    live fleet is judged against, and the dead worker is never flagged."""
+    scores = jnp.asarray([1.0, 1.1, 0.9, 1.05, 500.0, 500.0])
+    valid = jnp.asarray([True, True, True, True, False, False])
+    flags = np.asarray(sched.flag_stragglers(scores, 3.0, valid))
+    assert not flags[4:].any()
+    assert not flags[:4].any()
+    # two dead workers drag the unmasked median/MAD so far that a genuine
+    # live straggler (2.5 vs a ~1.0 pack) escapes; the mask restores detection
+    scores2 = jnp.asarray([1.0, 1.1, 0.9, 2.5, 500.0, 500.0])
+    assert not np.asarray(sched.flag_stragglers(scores2, 3.0))[3]
+    assert np.asarray(sched.flag_stragglers(scores2, 3.0, valid))[3]
 
 
 def test_elastic_membership_pure():

@@ -79,6 +79,35 @@ def test_checkpoint_restart_resumes_exactly(tmp_path):
     np.testing.assert_allclose(loss_resumed, loss_ref, rtol=1e-4)
 
 
+def test_try_restore_degrades_gracefully_on_legacy_checkpoint(tmp_path):
+    """A checkpoint whose scheduler leaves have a drifted shape (e.g. the
+    pre-PR-4 fleet-global scalar ewma_count) is unusable: try_restore must
+    report False and let training start fresh — not crash at restore time,
+    and not limp along with wrong-shaped beliefs until the first eviction."""
+    import jax.numpy as jnp
+
+    run = _run_cfg(tmp_path, steps=8)
+    mk_cluster = lambda: SimulatedCluster(
+        [WorkerSpec(5.0, 0.5), WorkerSpec(6.0, 0.5)], seed=4
+    )
+    tr = Trainer(run, cluster=mk_cluster(), num_microbatches=4)
+    tr.train(2)
+    legacy_sched = tr.partitioner.state._replace(
+        ewma_count=jnp.zeros((), jnp.int32)  # the old fleet-global scalar
+    )
+    tr.ckpt.save(
+        tr.step,
+        {"params": tr.params, "opt_state": tr.opt_state, "sched": legacy_sched},
+        {"step": tr.step, "data_state": tr.data.state_dict()},
+    )
+    tr.ckpt.wait()
+
+    tr2 = Trainer(run, cluster=mk_cluster(), num_microbatches=4)
+    assert tr2.try_restore() is False  # unusable, reported honestly
+    rep = tr2.train(2)  # fresh start still trains
+    assert np.isfinite(rep.losses[-1])
+
+
 def test_straggler_soft_detection(tmp_path):
     run = _run_cfg(tmp_path, steps=30, straggler_threshold_sigma=2.0)
     cluster = SimulatedCluster(
