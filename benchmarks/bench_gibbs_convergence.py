@@ -101,6 +101,28 @@ def fleet_main() -> None:
         f"{us_ref / us_fused:.2f}x vs ref",
     )
 
+    # Sharded A/B: the SAME fused engine with its fleet axis partitioned
+    # across all local devices via shard_map (docs/scaling.md).  Chains
+    # advance bitwise-identically; only the device layout changes.
+    from repro.core.sharding import ShardingConfig
+
+    shard_cfg = ShardingConfig.auto()
+    sharded = jax.jit(
+        lambda st, tt, ff: gibbs.gibbs_batch(
+            st, tt, ff, n_iters=iters, grid_size=g, sharding=shard_cfg
+        )[0]
+    )
+    us_1dev, us_sh = time_pair_min(
+        lambda: fused(states, t, f), lambda: sharded(states, t, f), rounds=5
+    )
+    emit(
+        f"gibbs_fleet_engine_sharded_k{k}_g{g}_n{n}_it{iters}_"
+        f"d{shard_cfg.num_shards}", us_sh,
+        f"{cells / (us_sh * 1e-6) / 1e9:.2f} Gcell/s "
+        f"{us_1dev / us_sh:.2f}x vs single-device fused "
+        f"({shard_cfg.num_shards} shards)",
+    )
+
 
 def main() -> None:
     rng = np.random.default_rng(0)

@@ -103,6 +103,37 @@ def fleet_main() -> None:
         f"{us_ref / us_fused:.2f}x vs ref",
     )
 
+    # Sharded A/B: the same fused oracle with the fleet axis partitioned
+    # across all local devices (ISSUE 5 mesh path).  On the 1-device CPU
+    # container this measures pure shard_map overhead; under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 (CI) or on a real
+    # multi-chip slice it is the scale-out path.
+    from repro.core.sharding import ShardingConfig, shard_fleet_call
+
+    shard_cfg = ShardingConfig.auto()
+    body = lambda tt, ff, m, l, a, b, pa, pb: log_posterior_grid(
+        grid, tt, ff, m, l, a, b, pa, pb, symmetric_grid=True
+    )
+    # shard_fleet_call pads K up to the shard count (a 6-device host does
+    # not divide K=16) — the padded rows are honest overhead of the mesh.
+    # Both sides take all 8 operands per call so neither gets a
+    # constant-folding advantage (same discipline as the legacy/fused pair).
+    fused_full = jax.jit(body)
+    fused_sh = jax.jit(
+        lambda *a: shard_fleet_call(body, shard_cfg, a)
+    )
+    us_1dev, us_sh = time_pair_min(
+        lambda: fused_full(t, f, mu, lam, alpha, beta, ap, bp),
+        lambda: fused_sh(t, f, mu, lam, alpha, beta, ap, bp),
+    )
+    emit(
+        f"posterior_grid_fleet_sharded_k{k}_g{g}_n{n}_"
+        f"d{shard_cfg.num_shards}", us_sh,
+        f"{cells / (us_sh * 1e-6) / 1e9:.2f} Gcell/s "
+        f"{us_1dev / us_sh:.2f}x vs single-device fused "
+        f"({shard_cfg.num_shards} shards)",
+    )
+
     # Pallas fleet kernel: one launch for all K workers and both exponents.
     # On CPU this is interpret-mode emulation (honest but not the production
     # number — on TPU the same call lowers to one Mosaic kernel).

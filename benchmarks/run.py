@@ -6,6 +6,10 @@ the fleet-scale estimation-engine cases) so a CPU-only runner finishes in
 minutes; ``--json PATH`` additionally persists every emitted row (plus the
 suite name and failures) as a JSON artifact — CI uploads the smoke run as
 ``BENCH_<pr>.json`` so the perf trajectory accumulates across PRs.
+
+The artifact schema, the interleaved min-time A/B methodology behind the
+``*_ref`` / ``*_fused`` / ``*_sharded`` row families, and the exact
+regeneration commands are documented in ``docs/benchmarks.md``.
 """
 from __future__ import annotations
 
@@ -73,6 +77,10 @@ def main(argv=None) -> None:
         payload = {
             "suite": "smoke" if "--smoke" in argv else "all",
             "backend": jax.default_backend(),
+            # Cross-PR comparisons must match device_count: forcing N host
+            # devices (the CI mesh recipe) partitions the machine, which
+            # shifts even the single-device rows (docs/benchmarks.md).
+            "device_count": jax.device_count(),
             "platform": platform.platform(),
             "failed": failed,
             "rows": common.ROWS,

@@ -37,16 +37,19 @@ from .posterior import (
     posterior_predictive_logpdf,
     update_normal_gamma,
 )
+from .sharding import ShardingConfig, constrain_fleet, shard_fleet_map
 
 __all__ = [
     "BetaParams",
     "GibbsState",
     "HeterogeneityAwarePartitioner",
     "NormalGammaParams",
+    "ShardingConfig",
     "UnitParams",
     "WorkerTelemetry",
     "beta_logpdf",
     "completion_cdf",
+    "constrain_fleet",
     "dag_completion_moments",
     "exponent_grid",
     "fit",
@@ -69,6 +72,7 @@ __all__ = [
     "optimize_fractions",
     "pareto_mask",
     "serial_moments",
+    "shard_fleet_map",
     "posterior_predictive_logpdf",
     "quantize_fractions",
     "sample_beta",

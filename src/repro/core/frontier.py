@@ -105,6 +105,11 @@ def serial_moments(stage_means: Array, stage_vars: Array) -> Tuple[Array, Array]
     mean and variance both add — the companion paper's sequential-channel
     composition.  ``stage_means``/``stage_vars`` are (S,) (or (S, ...) for
     batched composition over a trailing axis).
+
+    >>> import jax.numpy as jnp
+    >>> e, v = serial_moments(jnp.asarray([3.0, 2.0]), jnp.asarray([0.4, 0.1]))
+    >>> float(e), float(v)
+    (5.0, 0.5)
     """
     return jnp.sum(stage_means, axis=0), jnp.sum(stage_vars, axis=0)
 
@@ -123,6 +128,15 @@ def parallel_max_moments(
     share ancestors are treated as independent (the classic PERT
     approximation) — the induced positive correlation means the true E[max]
     is slightly LOWER than reported, so the composition errs conservative.
+
+    >>> import jax.numpy as jnp
+    >>> e, v = parallel_max_moments(
+    ...     jnp.asarray([3.0, 3.0]), jnp.asarray([0.25, 0.25]))
+    >>> bool(e > 3.0)   # E[max of two noisy branches] exceeds either mean
+    True
+    >>> e0, _ = parallel_max_moments(jnp.asarray([5.0]), jnp.asarray([1e-9]))
+    >>> bool(abs(e0 - 5.0) < 0.01)  # single near-deterministic branch
+    True
     """
     std = jnp.sqrt(jnp.maximum(branch_vars, 1e-18))
     eps = _quad_grid(branch_means, std, num_points, jnp.float32)
@@ -149,6 +163,19 @@ def dag_completion_moments(
     (:func:`serial_moments` pairwise), and the DAG completes at the max over
     sink stages.  A serial chain reduces exactly to summed moments; parallel
     branches compose by quadrature over the per-branch survival functions.
+
+    >>> import jax.numpy as jnp
+    >>> chain = ((), (0,), (1,))                   # 0 -> 1 -> 2
+    >>> e, v = dag_completion_moments(
+    ...     chain, jnp.asarray([1.0, 2.0, 3.0]), jnp.asarray([0.1, 0.1, 0.1]))
+    >>> round(float(e), 4), round(float(v), 4)     # chain == summed moments
+    (6.0, 0.3)
+    >>> diamond = ((), (0,), (0,), (1, 2))         # 0 -> {1, 2} -> 3
+    >>> e_d, _ = dag_completion_moments(
+    ...     diamond, jnp.asarray([1.0, 2.0, 2.0, 1.0]),
+    ...     jnp.asarray([0.1, 0.2, 0.2, 0.1]))
+    >>> bool(e_d > 4.0)   # E[max] of the noisy parallel arms adds a premium
+    True
     """
     s = len(preds)
     fin_e: list = [None] * s

@@ -22,7 +22,11 @@ Implementation notes (TPU-native):
   * single-unit states (scalar leaves) take the same code path with K
     collapsed, so ``vmap(gibbs_batch)`` remains valid for exotic batching;
   * ``fit`` streams telemetry batches through ``lax.scan`` with the final
-    partial batch padded + masked, so no observation is ever dropped.
+    partial batch padded + masked, so no observation is ever dropped;
+  * the fleet axis (including the folded S*K stage-fleet axis of a workflow
+    DAG) optionally shards across a device mesh via ``shard_map`` — pass a
+    ``core.sharding.ShardingConfig`` as ``sharding=``; results are bitwise
+    identical to the single-device program (see ``docs/scaling.md``).
 """
 from __future__ import annotations
 
@@ -39,6 +43,7 @@ from .moments import (
     update_alpha_beta_params,
 )
 from .posterior import NormalGammaParams, log_likelihood, update_normal_gamma
+from .sharding import ShardingConfig, shard_fleet_call
 
 Array = jax.Array
 
@@ -99,33 +104,23 @@ def _sample(fn, key: Array, *params: Array) -> Array:
     return jax.vmap(fn)(key, *params)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("n_iters", "grid_size", "use_pallas", "chain_priors")
-)
-def gibbs_batch(
+def _advance(
     state: GibbsState,
     t: Array,
     f: Array,
-    mask: Optional[Array] = None,
+    mask: Optional[Array],
     *,
-    n_iters: int = 20,
-    grid_size: int = 512,
-    use_pallas: bool = False,
-    chain_priors: bool = True,
+    n_iters: int,
+    grid_size: int,
+    use_pallas: bool,
+    chain_priors: bool,
 ) -> Tuple[GibbsState, Array]:
-    """Process one telemetry batch; returns (new_state, log_likelihood).
+    """One telemetry batch of Gibbs sweeps (the ``gibbs_batch`` body).
 
-    Fleet-native: ``state`` may carry a leading worker axis K on every leaf
-    (with t/f/mask shaped (K, N)), in which case all K chains advance inside
-    one program and the grid posterior is a single fused evaluation — one
-    Pallas launch per sweep when ``use_pallas`` — instead of K separate ones.
-
-    Args:
-      state: current chain state (prior hyperparameters + samples).
-      t, f: observations, shape (N,) or (K, N).
-      mask: optional validity mask, same shape as ``t``.
-      chain_priors: if True (paper's Algorithm 1), the batch posterior becomes
-        the next batch's prior.
+    Strictly per-worker: no operation mixes rows of the fleet axis, which is
+    what makes the whole function safe to ``shard_map`` over K — each shard
+    runs this exact program on its slice of the fleet and the results
+    concatenate to the single-device answer bitwise.
     """
     grid = exponent_grid(grid_size)
 
@@ -165,6 +160,71 @@ def gibbs_batch(
 
     ll = log_likelihood(t, f, state.mu, state.lam, state.alpha, state.beta, mask)
     return state, ll
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_iters", "grid_size", "use_pallas", "chain_priors", "sharding"
+    ),
+)
+def gibbs_batch(
+    state: GibbsState,
+    t: Array,
+    f: Array,
+    mask: Optional[Array] = None,
+    *,
+    n_iters: int = 20,
+    grid_size: int = 512,
+    use_pallas: bool = False,
+    chain_priors: bool = True,
+    sharding: Optional[ShardingConfig] = None,
+) -> Tuple[GibbsState, Array]:
+    """Process one telemetry batch; returns (new_state, log_likelihood).
+
+    Fleet-native: ``state`` may carry a leading worker axis K on every leaf
+    (with t/f/mask shaped (K, N)), in which case all K chains advance inside
+    one program and the grid posterior is a single fused evaluation — one
+    Pallas launch per sweep when ``use_pallas`` — instead of K separate ones.
+
+    With ``sharding`` (a ``core.sharding.ShardingConfig``) the fleet axis is
+    additionally partitioned across the mesh's ``workers`` devices via
+    ``shard_map``: each shard advances its K/n_shards chains through the same
+    fused per-shard program (kernel launch included), the grid stays
+    replicated, and only the small per-worker outputs cross shards.  The
+    per-worker math never mixes fleet rows, so the sharded result equals the
+    single-device result bitwise (PRNG splits are per-worker).  K not
+    divisible by the shard count is padded with masked-out dummy workers and
+    sliced back.  Single-unit states ((N,) telemetry) ignore ``sharding``.
+
+    Args:
+      state: current chain state (prior hyperparameters + samples).
+      t, f: observations, shape (N,) or (K, N).
+      mask: optional validity mask, same shape as ``t``.
+      chain_priors: if True (paper's Algorithm 1), the batch posterior becomes
+        the next batch's prior.
+      sharding: optional fleet-axis device sharding; None = single device.
+    """
+    kw = dict(
+        n_iters=n_iters,
+        grid_size=grid_size,
+        use_pallas=use_pallas,
+        chain_priors=chain_priors,
+    )
+    if sharding is None or t.ndim < 2:
+        return _advance(state, t, f, mask, **kw)
+
+    # Dummy workers added by the pad (when K % n_shards != 0) carry
+    # duplicated finite state rows and fully-masked telemetry: they compute
+    # a discarded posterior from zero observations and cannot touch real
+    # rows (no cross-worker ops).
+    m = jnp.ones_like(t) if mask is None else jnp.broadcast_to(mask, t.shape)
+    return shard_fleet_call(
+        functools.partial(_advance, **kw),
+        sharding,
+        (state, t, f, m),
+        mask_index=3,
+    )
 
 
 def discount_state(state: GibbsState, rho: float) -> GibbsState:
@@ -216,6 +276,16 @@ def fit(
 
     Returns the final state and the per-batch log-likelihood trace
     (the paper's Fig 5 curve).
+
+    >>> import jax, jax.numpy as jnp
+    >>> key = jax.random.PRNGKey(0)
+    >>> f = jax.random.uniform(key, (48,), minval=0.1, maxval=0.9)
+    >>> t = f**0.8 * 10.0                       # noiseless t = f^alpha mu
+    >>> state, lls = fit(key, t, f, batch_size=32, n_iters=4, grid_size=64)
+    >>> lls.shape                               # ceil(48 / 32) batches
+    (2,)
+    >>> bool(abs(state.ng.mu0 - 10.0) < 2.0)    # posterior mean near truth
+    True
     """
     n = t.shape[-1]
     n_batches = max(-(-n // batch_size), 1)
@@ -257,13 +327,17 @@ def fit_fleet(
     grid_size: int = 512,
     mu_guess: Optional[Array] = None,
     use_pallas: bool = False,
+    sharding: Optional[ShardingConfig] = None,
 ) -> Tuple[GibbsState, Array]:
     """Fleet estimation: t, f of shape (K, N) -> per-worker states.
 
     One device program estimates every worker simultaneously through the
     fleet-native ``gibbs_batch`` — with ``use_pallas`` the grid posterior of
     all K workers and both exponents is one kernel launch per sweep.  This is
-    the production path for thousands of nodes.
+    the production path for thousands of nodes.  ``sharding`` additionally
+    partitions the K axis across a device mesh (see ``gibbs_batch``); the
+    per-worker PRNG splits make the sharded chains match single-device
+    chains bitwise.
     """
     k = t.shape[0]
     keys = jax.random.split(key, k)
@@ -281,7 +355,8 @@ def fit_fleet(
 
     states = jax.vmap(one)(keys, mu_guess)
     states, ll = gibbs_batch(
-        states, t, f, n_iters=n_iters, grid_size=grid_size, use_pallas=use_pallas
+        states, t, f, n_iters=n_iters, grid_size=grid_size,
+        use_pallas=use_pallas, sharding=sharding,
     )
     return states, ll
 
@@ -317,6 +392,7 @@ def fit_dag(
     grid_size: int = 512,
     mu_guess: Optional[Array] = None,
     use_pallas: bool = False,
+    sharding: Optional[ShardingConfig] = None,
 ) -> Tuple[GibbsState, Array]:
     """Stacked stage-fleet estimation: t, f of shape (S, K, N).
 
@@ -329,8 +405,20 @@ def fit_dag(
     gets split index s*K + k), so the result bitwise-matches S independent
     ``fit_fleet`` calls handed the corresponding key slices.
 
+    ``sharding`` partitions the FOLDED S*K stage-fleet axis across a device
+    mesh — the sharded program pads S*K (not K) up to the shard count, so
+    even awkward (S, K) combinations run on any mesh size.
+
     Returns per-stage-per-worker states with (S, K) leaves and the (S, K)
     log-likelihood.
+
+    >>> import jax, jax.numpy as jnp
+    >>> key = jax.random.PRNGKey(0)
+    >>> f = jax.random.uniform(key, (2, 3, 32), minval=0.1, maxval=0.9)
+    >>> t = f**0.8 * 10.0                       # 2 stages x 3 workers
+    >>> states, ll = fit_dag(key, t, f, n_iters=3, grid_size=64)
+    >>> ll.shape, states.mu.shape               # (S, K) leaves throughout
+    ((2, 3), (2, 3))
     """
     s, k, n = t.shape
     states, ll = fit_fleet(
@@ -341,5 +429,6 @@ def fit_dag(
         grid_size=grid_size,
         mu_guess=None if mu_guess is None else jnp.reshape(mu_guess, (s * k,)),
         use_pallas=use_pallas,
+        sharding=sharding,
     )
     return unfold_stage_axis(states, s), ll.reshape(s, k)

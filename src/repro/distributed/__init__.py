@@ -1,1 +1,16 @@
-"""distributed subpackage."""
+"""Distributed-systems layer: model sharding, fault tolerance, compression.
+
+Two sharding concerns live in this repo and are easy to conflate:
+
+  * **Model-tensor sharding** (``repro.distributed.sharding``): logical-axis
+    rules mapping parameter/cache tensors onto TP/FSDP meshes for the
+    training and serving stacks.
+  * **Estimator fleet sharding** (``repro.core.sharding``, re-exported here
+    as :class:`ShardingConfig`): partitioning the Bayesian estimation
+    engine's worker axis K across a ``workers`` device mesh via
+    ``shard_map`` — see ``docs/scaling.md``.  Thread it through
+    ``sched.SchedulerConfig(mesh=...)`` or ``core.gibbs.*(sharding=...)``.
+"""
+from repro.core.sharding import ShardingConfig
+
+__all__ = ["ShardingConfig"]

@@ -1,4 +1,8 @@
-"""Logical-axis sharding rules with divisibility fallback.
+"""Logical-axis sharding rules for MODEL tensors, with divisibility fallback.
+
+(The estimation engine's fleet-axis sharding is a separate, much simpler
+concern — a 1-D ``workers`` mesh over an embarrassingly parallel axis — and
+lives in ``repro.core.sharding.ShardingConfig``; see ``docs/scaling.md``.)
 
 Every parameter/cache tensor carries logical axis names (see
 ``repro.models.params``).  ``spec_for`` maps them to mesh axes greedily:

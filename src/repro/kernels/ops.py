@@ -43,6 +43,8 @@ def posterior_grid_fleet(
     alpha_prior,
     beta_prior,
     mask: Optional[Array] = None,
+    *,
+    sharding=None,
 ) -> Array:
     """Both exponent posteriors for a whole fleet in one kernel launch.
 
@@ -54,6 +56,15 @@ def posterior_grid_fleet(
     is presented to the kernel as one S*K-worker fleet and the (S*K, 2, G)
     output is unfolded back — the kernel itself never changes, and the whole
     DAG still costs ONE launch.
+
+    ``sharding`` (a ``repro.core.sharding.ShardingConfig``, duck-typed so
+    this bottom layer stays import-free of ``core``) partitions the
+    (possibly folded) fleet axis across the mesh's workers axis with
+    ``shard_map``: each device runs the same fused kernel on its K/n_shards
+    rows against the replicated grid, telemetry never leaves its shard, and
+    only the tiny (K, 2, G) log-posterior output crosses devices — lazily,
+    when a consumer (moment integration, proposal solving) gathers it.
+    K % n_shards != 0 pads with masked-out rows, sliced off on return.
     """
     if mask is None:
         mask = jnp.ones_like(t)
@@ -64,19 +75,39 @@ def posterior_grid_fleet(
         flat_k = lambda x: jnp.reshape(
             jnp.broadcast_to(jnp.asarray(x, jnp.float32), lead), (-1,)
         )
-        out = posterior_grid_fleet_pallas(
-            grid, flat_kn(t), flat_kn(f), flat_kn(mask),
+        out = posterior_grid_fleet(
+            grid, flat_kn(t), flat_kn(f),
             flat_k(mu), flat_k(lam), flat_k(alpha), flat_k(beta),
-            flat_k(alpha_prior.a), flat_k(alpha_prior.b),
-            flat_k(beta_prior.a), flat_k(beta_prior.b),
-            interpret=_interpret(),
+            type(alpha_prior)(flat_k(alpha_prior.a), flat_k(alpha_prior.b)),
+            type(beta_prior)(flat_k(beta_prior.a), flat_k(beta_prior.b)),
+            flat_kn(mask),
+            sharding=sharding,
         )
         return jnp.reshape(out, lead + out.shape[1:])
-    return posterior_grid_fleet_pallas(
-        grid, t, f, mask, mu, lam, alpha, beta,
-        alpha_prior.a, alpha_prior.b, beta_prior.a, beta_prior.b,
-        interpret=_interpret(),
+
+    per_k = lambda x: jnp.broadcast_to(
+        jnp.asarray(x, jnp.float32), t.shape[:1]
     )
+    args = (
+        t, f, mask,
+        per_k(mu), per_k(lam), per_k(alpha), per_k(beta),
+        per_k(alpha_prior.a), per_k(alpha_prior.b),
+        per_k(beta_prior.a), per_k(beta_prior.b),
+    )
+    launch = lambda *a: posterior_grid_fleet_pallas(
+        grid, *a, interpret=_interpret()
+    )
+    if sharding is None:
+        return launch(*args)
+
+    from repro.core.sharding import (  # deferred: keeps the layer acyclic
+        shard_fleet_call,
+    )
+
+    # Rows added by the pad (K % n_shards != 0) are fully masked: they
+    # yield a prior-only posterior row that is sliced off and never
+    # consulted.
+    return shard_fleet_call(launch, sharding, args, mask_index=2)
 
 
 def posterior_grid_alpha(

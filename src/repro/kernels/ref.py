@@ -42,8 +42,9 @@ def posterior_grid_ref(
 
     warnings.warn(
         "repro.kernels.ref.posterior_grid_ref is deprecated; use "
-        "repro.core.moments.log_posterior_grid (fused both-modes oracle) "
-        "or log_posterior_{alpha,beta}_ref.",
+        "repro.core.moments.log_posterior_grid (the fused both-modes fleet "
+        "oracle) or its per-mode slices "
+        "repro.core.moments.log_posterior_{alpha,beta}_ref.",
         DeprecationWarning,
         stacklevel=2,
     )

@@ -39,6 +39,7 @@ from repro.core.frontier import (
     dag_completion_moments,
     mean_var_completion,
 )
+from repro.core.sharding import constrain_fleet
 
 from .objectives import Objective
 from .scheduler import (
@@ -188,7 +189,12 @@ def init_dag(config: SchedulerConfig, dag: WorkflowDAG, key: Array) -> DagState:
     keys = jax.random.split(sub, s * k)
     fleet = jax.vmap(lambda kk: gibbs.init_state(kk, mu_guess=config.mu_guess))(keys)
     return DagState(
-        gibbs=gibbs.unfold_stage_axis(fleet, s),
+        # With config.mesh the per-stage fleets are sharded over the worker
+        # axis (leaf axis 1) from birth; observe_dag's folded S*K program
+        # re-lays them out stage-major per shard as needed.
+        gibbs=constrain_fleet(
+            gibbs.unfold_stage_axis(fleet, s), config.mesh, axis=1
+        ),
         step=jnp.zeros((), jnp.int32),
         key=key,
     )
@@ -205,8 +211,10 @@ def observe_dag(
     The stage axis folds into the fleet axis, so the whole DAG advances as
     ONE stacked fleet-native ``gibbs_batch`` program — with the Pallas path
     each sweep's grid posterior is a single kernel launch covering S*K
-    workers and both exponents.  Returns per-stage-per-worker (S, K)
-    log-likelihood.
+    workers and both exponents.  With ``config.mesh`` that folded S*K axis
+    is partitioned across the device mesh (``shard_map``), so a wide or
+    deep DAG scales out without changing this call.  Returns
+    per-stage-per-worker (S, K) log-likelihood.
     """
     s = telemetry.times.shape[0]
     fold = gibbs.fold_stage_axis

@@ -38,6 +38,18 @@ class Objective:
       "mean_var"    — E[t] + risk_aversion * Var[t] (risk-sensitive)
       "var_budget"  — min E[t]  s.t.  Var[t] <= var_budget
       "deadline"    — max P(t <= deadline)          (QoS quantile target)
+
+    One value encodes the choice for every consumer — the simplex solver,
+    the two-way frontier sweep, quantization, and the serve path:
+
+    >>> obj = Objective.mean_var(0.5)
+    >>> float(obj.score_moments(10.0, 4.0))        # E + 0.5 * Var
+    12.0
+    >>> feasible = Objective.variance_budget(5.0)
+    >>> bool(feasible.score_moments(10.0, 4.0) < feasible.score_moments(9.0, 6.0))
+    True
+    >>> Objective.deadline_quantile(30.0).needs_cdf()  # moment form not enough
+    True
     """
 
     kind: str = "mean"

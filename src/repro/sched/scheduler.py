@@ -37,6 +37,7 @@ import numpy as np
 from repro.core import gibbs
 from repro.core.frontier import UnitParams, mean_var_completion
 from repro.core.posterior import posterior_predictive_logpdf
+from repro.core.sharding import ShardingConfig, constrain_fleet
 
 from .objectives import Objective, evaluate
 
@@ -82,6 +83,10 @@ class SchedulerConfig:
     grid_size: int = 256  # exponent-posterior grid resolution
     use_pallas: Optional[bool] = None  # route estimation through the fused
     # fleet kernel; None = auto by backend (TPU: Mosaic kernels, else oracle)
+    mesh: Optional[ShardingConfig] = None  # shard the fleet axis across a
+    # device mesh (observe/observe_dag run one shard_map'd program; state
+    # leaves carry fleet shardings); None = single-device, bitwise-legacy.
+    # A bare jax.sharding.Mesh is accepted and wrapped (axis "workers").
     discount: float = 0.9  # power-prior forgetting factor
     mu_guess: float = 1.0  # prior center for per-unit mean time
     ewma: float = 0.8  # anomaly-score smoothing
@@ -89,6 +94,10 @@ class SchedulerConfig:
     opt_lr: float = 0.05
     num_points: int = 512  # quadrature points for objective evaluation
     min_fraction: float = 5e-3  # proposal floor per worker (see solve_fractions)
+
+    def __post_init__(self):
+        if self.mesh is not None and not isinstance(self.mesh, ShardingConfig):
+            object.__setattr__(self, "mesh", ShardingConfig(mesh=self.mesh))
 
 
 # --------------------------------------------------------------------------
@@ -103,9 +112,16 @@ def init(config: SchedulerConfig, num_workers: int, key: Array) -> SchedulerStat
         lambda k: gibbs.init_state(k, mu_guess=config.mu_guess)
     )(keys)
     return SchedulerState(
-        gibbs=fleet,
-        ewma_ll=jnp.zeros((num_workers,), jnp.float32),
-        ewma_count=jnp.zeros((num_workers,), jnp.int32),
+        # With config.mesh the fleet leaves carry NamedShardings from birth,
+        # so the telemetry->estimate->propose cycle never reshuffles them and
+        # checkpointing (np.asarray gathers) works unchanged.
+        gibbs=constrain_fleet(fleet, config.mesh),
+        ewma_ll=constrain_fleet(
+            jnp.zeros((num_workers,), jnp.float32), config.mesh
+        ),
+        ewma_count=constrain_fleet(
+            jnp.zeros((num_workers,), jnp.int32), config.mesh
+        ),
         step=jnp.zeros((), jnp.int32),
         key=key,
     )
@@ -121,7 +137,9 @@ def advance_fleet(
 
     Shared by ``observe`` (flat K-worker fleet) and ``dag.observe_dag``
     (stage-folded S*K fleet) so the estimation semantics cannot diverge.
-    Resolves ``config.use_pallas=None`` to the backend default.
+    Resolves ``config.use_pallas=None`` to the backend default; threads
+    ``config.mesh`` so a sharded scheduler advances each worker's chain on
+    the device that owns it (``gibbs_batch``'s ``shard_map`` path).
     """
     use_pallas = config.use_pallas
     if use_pallas is None:
@@ -136,6 +154,7 @@ def advance_fleet(
         n_iters=config.n_iters,
         grid_size=config.grid_size,
         use_pallas=use_pallas,
+        sharding=config.mesh,
     )
 
 

@@ -51,7 +51,19 @@ class Trainer:
         cluster: Optional[SimulatedCluster] = None,
         num_microbatches: Optional[int] = None,
         mesh_info: Optional[MeshInfo] = None,
+        scheduler_config: Optional[SchedulerConfig] = None,
     ):
+        """``scheduler_config`` overrides the default partitioner config —
+        production deployments pass ``SchedulerConfig(mesh=ShardingConfig)``
+        here to shard the estimator's fleet axis across the cluster's devices
+        (``docs/scaling.md``); the checkpoint path is unchanged because
+        ``CheckpointManager`` gathers sharded leaves on save.  A config whose
+        objective is the default (mean) still honors the run's
+        ``partitioner_risk_aversion`` — opting into sharding must not
+        silently drop risk-sensitive partitioning.  Any non-default
+        objective wins as-is; note ``Objective.mean()`` IS the default, so
+        to force a plain mean objective against a run that sets
+        ``partitioner_risk_aversion``, set the run's risk aversion to 0."""
         self.run = run
         self.cfg = run.model
         self.cluster = cluster
@@ -93,12 +105,15 @@ class Trainer:
         self._worker_of_mb = None
         if run.partitioner_enabled and cluster is not None:
             ra = run.partitioner_risk_aversion
+            sched_cfg = scheduler_config or SchedulerConfig(mu_guess=1.0)
+            if sched_cfg.objective == Objective():
+                sched_cfg = dataclasses.replace(
+                    sched_cfg,
+                    objective=Objective.mean_var(ra) if ra else Objective.mean(),
+                )
             self.partitioner = Scheduler(
                 cluster.num_workers,
-                config=SchedulerConfig(
-                    objective=Objective.mean_var(ra) if ra else Objective.mean(),
-                    mu_guess=1.0,
-                ),
+                config=sched_cfg,
                 seed=run.seed,
             )
             self.monitor = FaultToleranceMonitor(

@@ -181,6 +181,28 @@ def test_posterior_grid_block_invariance(block_g, block_n):
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=1e-3)
 
 
+def test_posterior_grid_ref_deprecation_names_unified_oracle():
+    """The shim's DeprecationWarning must point callers at the CURRENT
+    replacement — ``repro.core.moments.log_posterior_grid`` — and the
+    equivalence the message promises must actually hold."""
+    grid = jnp.linspace(1e-4, 1 - 1e-4, 8, dtype=jnp.float32)
+    t = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+    f = jnp.full((4,), 0.5, jnp.float32)
+    args = (jnp.float32(1.0), jnp.float32(1.0), jnp.float32(0.5),
+            jnp.float32(2.0), jnp.float32(2.0))
+    with pytest.warns(
+        DeprecationWarning, match=r"repro\.core\.moments\.log_posterior_grid"
+    ) as rec:
+        out = ref.posterior_grid_ref(grid, t, f, *args, mode="alpha")
+    assert "log_posterior_{alpha,beta}_ref" in str(rec[0].message)
+    from repro.core.moments import log_posterior_alpha_ref
+
+    want = log_posterior_alpha_ref(
+        grid, t, f, args[0], args[1], args[2], BetaParams(args[3], args[4])
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
     "b,h,kvh,d,s", [(2, 8, 2, 64, 300), (1, 4, 4, 32, 128), (3, 9, 3, 16, 1000)]
