@@ -25,6 +25,7 @@ from benchmarks import (
     bench_kernels,
     bench_partitioner,
     bench_posterior_approx,
+    bench_serve,
     bench_train_step,
     common,
 )
@@ -37,6 +38,7 @@ ALL = [
     ("kernels", bench_kernels.main),
     ("dag_engine", bench_dag.main),
     ("train_step", bench_train_step.main),
+    ("serve_loop", bench_serve.main),
 ]
 
 SMOKE = [
@@ -45,6 +47,7 @@ SMOKE = [
     ("kernels_fleet", bench_kernels.fleet_main),
     ("gibbs_fleet_engine", bench_gibbs_convergence.fleet_main),
     ("dag_stacked_engine", bench_dag.smoke_main),
+    ("serve_loop", bench_serve.main),
 ]
 
 

@@ -1,7 +1,13 @@
-"""Serving with QoS-aware batch partitioning: a request batch is split across
-heterogeneous replicas using the learned frontier, with the QoS target
-expressed as a pluggable ``repro.sched.Objective`` (min latency, risk-averse
-mean+var, or a deadline quantile P(t <= eps) for tail-latency control).
+"""Serving with QoS-aware batch partitioning — push-mode edition: a request
+batch is split across heterogeneous replicas by the always-on estimation
+service (``repro.serve.ServiceLoop``).  The request loop never calls the
+scheduler inline: it reads the last-good split from the service's
+double-buffered slot (non-blocking), serves, and pushes measured telemetry
+into the device-resident ring; the service re-solves the split only when the
+posterior actually moves (drift-gated cadence, ``docs/serving.md``).
+
+The QoS target stays a pluggable ``repro.sched.Objective`` (min latency,
+risk-averse mean+var, or a deadline quantile for tail-latency control).
 
     PYTHONPATH=src python examples/serve_partitioned.py
 """
@@ -9,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import sched
+from repro import sched, serve
 from repro.configs import get_arch, reduced
 from repro.distributed.simulated_cluster import SimulatedCluster, WorkerSpec
 from repro.models import model_zoo
@@ -20,6 +26,12 @@ from repro.train import serve_step
 cfg = reduced(get_arch("tinyllama-1.1b"))
 params = model_zoo.init_model_params(jax.random.PRNGKey(0), cfg)
 
+# Jitted model closures are built ONCE, outside the request loop — each
+# request hits the jit cache instead of re-tracing prefill/decode per call
+# (the old ``serve_step.generate`` convenience rebuilt them every round).
+prefill = jax.jit(serve_step.make_prefill_step(cfg, ctx=ApplyCtx(mode="prefill")))
+decode = jax.jit(serve_step.make_decode_step(cfg, ctx=ApplyCtx(mode="decode")))
+
 # --- three serving replicas with different (unknown) speeds ----------------
 cluster = SimulatedCluster(
     [WorkerSpec(2.0, 0.2, 0.95, 0.9), WorkerSpec(5.0, 0.8, 0.9, 0.85),
@@ -27,53 +39,61 @@ cluster = SimulatedCluster(
     seed=0,
 )
 
-# --- pure-functional scheduler: explicit state, pure transitions ------------
-config = sched.SchedulerConfig(
-    objective=sched.Objective.mean(), n_iters=12, grid_size=128, mu_guess=3.0
+# --- the always-on service: ring-buffered observe, drift-gated propose ------
+config = serve.ServeConfig(
+    sched=sched.SchedulerConfig(
+        objective=sched.Objective.mean(), n_iters=12, grid_size=128,
+        mu_guess=3.0,
+    ),
+    capacity=8,          # telemetry rows buffered between drains
+    drift_threshold=0.05,
+    max_staleness=6,
 )
-state = sched.init(config, 3, jax.random.PRNGKey(1))
+loop = serve.ServiceLoop(3, config=config, seed=1)
 
-# --- online phase: serve batches, learn, re-split ---------------------------
+# --- online phase: serve batches, push telemetry, tick the service ----------
 BATCH = 24
 rng = np.random.default_rng(0)
-print("round | split (requests/replica) | batch latency (simulated)")
+print("round | split (requests/replica) | batch latency | service")
 for rnd in range(8):
-    fracs_prop, _ = sched.propose(state, config)  # jitted
+    fr = loop.fractions()                       # non-blocking slot read
     counts = sched.quantize_fractions(
-        np.asarray(fracs_prop), BATCH, sched.unit_params(state),
-        objective=config.objective,
+        fr, BATCH, sched.unit_params(loop.state.sched),
+        objective=config.sched.objective,
     )
     fracs = counts / counts.sum()
 
     # actually run the model for one replica's shard (semantics demo)
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (int(counts[0]), 12)),
                        jnp.int32)
-    out = serve_step.generate(
-        cfg, params, {"tokens": toks}, max_len=16, steps=3,
-        ctx_prefill=ApplyCtx(mode="prefill"), ctx_decode=ApplyCtx(mode="decode"),
-    )
-    assert out.shape == (int(counts[0]), 3)
+    cache = model_zoo.init_cache(cfg, int(counts[0]), 16, jnp.float32)
+    token, cache = prefill(params, {"tokens": toks}, cache)
+    for _ in range(2):
+        token, cache = decode(params, token, cache)
 
-    # telemetry: measured (simulated) per-replica latency for its fraction
-    times = np.stack([cluster.step_times(fracs) for _ in range(8)], axis=1)
-    fmat = np.tile(fracs[:, None], (1, 8))
-    state, _ = sched.observe(
-        state, sched.Telemetry(jnp.asarray(fmat), jnp.asarray(times)), config
-    )
-    lat = float(np.max(times.mean(axis=1)))
-    print(f"  {rnd}   | {counts} | {lat:.2f}s")
+    # telemetry: measured (simulated) per-replica latency, 8 rows per round
+    for _ in range(8):
+        loop.push(fracs, cluster.step_times(fracs))
+    info = loop.tick()                          # drain -> observe -> propose?
+    lat = float(np.max(cluster.step_times(fracs)))
+    print(f"  {rnd}   | {counts} | {lat:.2f}s | drift={float(info.drift):.3f} "
+          f"proposed={bool(info.proposed)}")
 
-fr, stats = sched.propose(state, config)
-fr = np.asarray(fr)
+c = loop.counters()
+fr = loop.fractions()
+stats = loop.state.stats
 print(f"\nlearned split {np.round(fr, 3)}  "
       f"E[latency]={float(stats.e_t):.2f}s  Var={float(stats.var):.3f}")
+print(f"service counters: {c['drains']} drains, {c['proposes']} proposes "
+      f"(skip rate {1.0 - c['proposes'] / max(c['drains'], 1):.2f})")
 eq = cluster.oracle_makespan(np.full(3, 1 / 3))
 lr = cluster.oracle_makespan(fr)
 print(f"true expected batch latency: equal={eq:.2f}s learned={lr:.2f}s "
       f"({100 * (eq - lr) / eq:.0f}% faster)")
 
 # tail-latency mode: same beliefs, different objective — spend a little mean
-# latency to buy predictability.  Pure API: just score under a new Objective.
+# latency to buy predictability.  Pure API: score under a new Objective.
+state = loop.state.sched
 risk_cfg = sched.SchedulerConfig(objective=sched.Objective.mean_var(5.0))
 fr_r, st_r = sched.propose(state, risk_cfg)
 print(f"risk-averse split {np.round(np.asarray(fr_r), 3)}  "

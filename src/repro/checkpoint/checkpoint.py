@@ -33,6 +33,13 @@ def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any]:
     return [np.asarray(l) for l in leaves], treedef
 
 
+def _flatten_with_paths(tree: Any):
+    """Flatten keeping key-paths; order matches ``tree_flatten`` exactly."""
+    kl, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [jax.tree_util.keystr(kp) for kp, _ in kl]
+    return paths, [leaf for _, leaf in kl], treedef
+
+
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
         self.dir = pathlib.Path(directory)
@@ -44,8 +51,15 @@ class CheckpointManager:
 
     # -- write ---------------------------------------------------------------
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
-        """Snapshot (sync device->host) then write (async unless disabled)."""
-        leaves, treedef = _flatten(tree)  # consistent snapshot
+        """Snapshot (sync device->host) then write (async unless disabled).
+
+        The manifest records each leaf's key-path (``jax.tree_util.keystr``)
+        so ``restore_by_name`` can later match leaves by NAME: a checkpoint
+        whose scheduler/ring leaves drifted in shape still gives back its
+        perfectly valid model params instead of forcing a fresh start.
+        """
+        keypaths, raw_leaves, treedef = _flatten_with_paths(tree)
+        leaves = [np.asarray(l) for l in raw_leaves]  # consistent snapshot
         extra = dict(extra or {})
         self.wait()  # one outstanding write at a time
 
@@ -60,6 +74,7 @@ class CheckpointManager:
             manifest = {
                 "step": step,
                 "num_arrays": len(leaves),
+                "keypaths": keypaths,
                 "process_index": jax.process_index(),
                 "extra": extra,
             }
@@ -117,6 +132,54 @@ class CheckpointManager:
                 )
         restored = jax.tree_util.tree_unflatten(treedef, arrs)
         return restored, manifest["extra"]
+
+    def restore_by_name(
+        self, tree_like: Any, step: Optional[int] = None
+    ) -> Tuple[Any, Dict, Dict[str, List[str]]]:
+        """Subset restore: match checkpoint leaves to ``tree_like`` by NAME.
+
+        Each leaf of ``tree_like`` whose key-path exists in the checkpoint
+        with the same shape and dtype gets the saved array; every other leaf
+        keeps its template value.  This is the structure-drift recovery
+        path: a shape-drifted scheduler or telemetry-ring leaf no longer
+        drags perfectly valid model params down with it — only the drifted
+        subtree resets.
+
+        Returns ``(tree, extra, report)`` where ``report`` lists the
+        ``restored`` and ``skipped`` key-paths so callers can decide whether
+        the subset is good enough (e.g. the trainer requires every
+        params/opt_state leaf).  Raises ``ValueError`` for pre-keypath
+        checkpoints (restore those positionally via ``restore``).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        manifest = json.loads((path / MANIFEST).read_text())
+        if "keypaths" not in manifest:
+            raise ValueError(
+                "checkpoint predates key-path manifests; use restore()"
+            )
+        index = {kp: i for i, kp in enumerate(manifest["keypaths"])}
+        paths, leaves, treedef = _flatten_with_paths(tree_like)
+        out, restored, skipped = [], [], []
+        for kp, leaf in zip(paths, leaves):
+            i = index.get(kp)
+            arr = np.load(path / f"arr_{i:05d}.npy") if i is not None else None
+            want_shape = tuple(getattr(leaf, "shape", ()))
+            want_dtype = getattr(leaf, "dtype", None)
+            if (
+                arr is not None
+                and tuple(arr.shape) == want_shape
+                and (want_dtype is None or arr.dtype == np.dtype(want_dtype))
+            ):
+                out.append(arr)
+                restored.append(kp)
+            else:
+                out.append(leaf)
+                skipped.append(kp)
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        return tree, manifest["extra"], {"restored": restored, "skipped": skipped}
 
     # -- hygiene ---------------------------------------------------------------
     def _retain(self) -> None:

@@ -122,7 +122,12 @@ class RunConfig:
     # partitioner (the paper's feature)
     partitioner_enabled: bool = True
     partitioner_risk_aversion: float = 0.0
-    partitioner_refit_every: int = 16
+    partitioner_refit_every: int = 16  # drain cadence (steps per ring drain)
+    # propose cadence (repro.serve drift gate): re-solve the split only when
+    # the posterior moved more than the threshold since the last solve, or
+    # after max_staleness drains — whichever comes first.
+    partitioner_drift_threshold: float = 0.02
+    partitioner_max_staleness: int = 4
     # fault tolerance
     checkpoint_every: int = 100
     checkpoint_dir: str = "/tmp/repro_ckpt"

@@ -132,14 +132,17 @@ def advance_fleet(
     times: Array,
     fracs: Array,
     config: SchedulerConfig,
+    mask: Optional[Array] = None,
 ) -> Tuple[gibbs.GibbsState, Array]:
     """The one fleet-advance path: discount -> fleet-native ``gibbs_batch``.
 
-    Shared by ``observe`` (flat K-worker fleet) and ``dag.observe_dag``
-    (stage-folded S*K fleet) so the estimation semantics cannot diverge.
-    Resolves ``config.use_pallas=None`` to the backend default; threads
-    ``config.mesh`` so a sharded scheduler advances each worker's chain on
-    the device that owns it (``gibbs_batch``'s ``shard_map`` path).
+    Shared by ``observe`` (flat K-worker fleet), ``dag.observe_dag``
+    (stage-folded S*K fleet) and the push-mode serving loop
+    (``repro.serve``, whole-ring drains with a masked tail) so the
+    estimation semantics cannot diverge.  Resolves ``config.use_pallas=None``
+    to the backend default; threads ``config.mesh`` so a sharded scheduler
+    advances each worker's chain on the device that owns it
+    (``gibbs_batch``'s ``shard_map`` path).
     """
     use_pallas = config.use_pallas
     if use_pallas is None:
@@ -151,6 +154,7 @@ def advance_fleet(
         fleet,
         times,
         fracs,
+        mask,
         n_iters=config.n_iters,
         grid_size=config.grid_size,
         use_pallas=use_pallas,
@@ -163,6 +167,7 @@ def observe(
     state: SchedulerState,
     telemetry: Telemetry,
     config: SchedulerConfig = SchedulerConfig(),
+    mask: Optional[Array] = None,
 ) -> Tuple[SchedulerState, Array]:
     """Gibbs-update every worker's posterior from one telemetry batch.
 
@@ -173,9 +178,13 @@ def observe(
     per-worker vmap — so with the Pallas path enabled (``config.use_pallas``,
     auto-on for TPU backends) each sweep's grid posterior is ONE kernel
     launch covering every worker and both exponents.
+
+    ``mask`` optionally invalidates telemetry elements (same shape as
+    ``telemetry.times``): masked slots — a ring drain's padded tail, a
+    failed worker's garbage times — are exact no-ops on every posterior.
     """
     fleet, ll = advance_fleet(
-        state.gibbs, telemetry.times, telemetry.fracs, config
+        state.gibbs, telemetry.times, telemetry.fracs, config, mask=mask
     )
     return state._replace(gibbs=fleet, step=state.step + 1), ll
 
@@ -510,8 +519,11 @@ class Scheduler:
         self.config = dataclasses.replace(self.config, objective=obj)
 
     # -- estimation --------------------------------------------------------
-    def observe(self, telemetry: Telemetry) -> Array:
-        self.state, ll = observe(self.state, telemetry, self.config)
+    def observe(self, telemetry: Telemetry, mask=None) -> Array:
+        self.state, ll = observe(
+            self.state, telemetry, self.config,
+            None if mask is None else jnp.asarray(mask),
+        )
         return ll
 
     def unit_params(self) -> UnitParams:

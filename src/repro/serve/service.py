@@ -1,0 +1,306 @@
+"""The estimator as an always-on service: decoupled observe/propose cadence.
+
+The paper's pitch is replacing offline controlled experiments with online
+inference — but a synchronous observe->propose call chain is still the
+offline posture: every caller blocks on a Gibbs sweep AND a simplex solve.
+This module splits the two rates:
+
+  * **observe on every drained batch** — telemetry lands in a
+    ``TelemetryRing`` (push-mode, device-resident) and each ``tick`` drains
+    the whole buffer through the fleet-native ``gibbs_batch`` via
+    ``sched.advance_fleet`` (masked tail, identical semantics to
+    ``sched.observe``);
+  * **propose only when posteriors move** — a symmetrized-KL drift metric
+    between the posterior point estimates at the last propose and now gates
+    the simplex solve (``lax.cond``), with a hard ``max_staleness`` so a
+    slowly-drifting fleet can never pin a stale split forever;
+  * **readers never block** — the last-good fractions live in a
+    double-buffered host slot (``ServiceLoop.fractions()``); a reader dips
+    into whichever buffer is active while the ticker fills the other.
+
+The whole per-tick program — drain, Gibbs update, drift test, conditional
+solve — is ONE jitted function with the service state donated
+(``donate_argnums``), so steady-state serving re-uses the state buffers in
+place instead of allocating a fresh fleet posterior every batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.frontier import UnitParams
+from repro.sched.objectives import Objective
+from repro.sched.scheduler import (
+    ProposeStats,
+    SchedulerConfig,
+    SchedulerState,
+    advance_fleet,
+    solve_fractions,
+    unit_params,
+)
+from repro.sched import scheduler as _sched
+
+from .ring import TelemetryRing, drain, push, ring_init
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Static service knobs; hashable, jit-static like ``SchedulerConfig``.
+
+    ``drift_threshold`` gates re-solving the split: ``tick`` re-runs
+    ``propose`` only when the posterior drift since the last solve exceeds
+    it (or the split is ``max_staleness`` drains old).  Drift is the max
+    over workers of a symmetrized Normal KL on (mu, sigma) plus squared
+    shifts of the exponent means — see :func:`posterior_drift`.
+    """
+
+    sched: SchedulerConfig = SchedulerConfig()
+    capacity: int = 64  # ring slots buffered between drains
+    drift_threshold: float = 0.1
+    max_staleness: int = 8  # hard cap: drains between proposes
+
+
+class ServeState(NamedTuple):
+    """Everything the service owns; one checkpointable pytree."""
+
+    sched: SchedulerState  # fleet posteriors (K, ...) leaves
+    ring: TelemetryRing  # buffered telemetry
+    fractions: Array  # (K,) last-published split
+    stats: ProposeStats  # frontier stats at the last propose
+    ref: UnitParams  # posterior point estimates at the last propose
+    staleness: Array  # int32, drains since the last propose
+    n_drains: Array  # int32, lifetime non-empty drains
+    n_proposes: Array  # int32, lifetime proposes
+    last_drift: Array  # float32, drift measured at the last tick
+
+
+class TickInfo(NamedTuple):
+    """Per-tick observability (small, cheap to host-sync)."""
+
+    ll: Array  # (K,) per-worker log-likelihood of the drained batch
+    proposed: Array  # bool: did this tick re-solve the split?
+    drift: Array  # float32 posterior drift vs the last propose
+    drained: Array  # int32 observations consumed from the ring
+
+
+def posterior_drift(ref: UnitParams, cur: UnitParams) -> Array:
+    """How far the fleet's posterior point estimates moved; scalar >= 0.
+
+    Per worker: the symmetrized KL divergence between the completion-time
+    Normals N(mu_ref, sigma_ref^2) and N(mu_cur, sigma_cur^2) — scale-free,
+    so a 10ms shift matters on a 50ms worker and vanishes on a 5s one —
+    plus the squared shifts of the exponent posterior means (alpha, beta
+    live in [0, 1]; weight 4 makes a 0.15 exponent jump comparable to a
+    one-sigma mean shift).  The fleet drift is the max over workers: one
+    worker changing regime must trigger a re-solve even if the other 9999
+    are steady.
+    """
+    s2r = ref.sigma**2 + 1e-12
+    s2c = cur.sigma**2 + 1e-12
+    d2 = (ref.mu - cur.mu) ** 2
+    kl_sym = 0.25 * ((s2r + d2) / s2c + (s2c + d2) / s2r) - 0.5
+    expo = (ref.alpha - cur.alpha) ** 2 + (ref.beta - cur.beta) ** 2
+    return jnp.max(kl_sym + 4.0 * expo)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "num_workers"))
+def init(config: ServeConfig, num_workers: int, key: Array) -> ServeState:
+    """Fresh service state: empty ring, uniform split, max staleness.
+
+    Staleness starts saturated so the FIRST data-carrying tick always
+    proposes — the uniform placeholder split is published, never trusted.
+    """
+    sched_state = _sched.init(config.sched, num_workers, key)
+    k = num_workers
+    return ServeState(
+        sched=sched_state,
+        ring=ring_init(config.capacity, num_workers),
+        fractions=jnp.full((k,), 1.0 / k, jnp.float32),
+        stats=ProposeStats(
+            e_t=jnp.asarray(jnp.inf, jnp.float32),
+            var=jnp.asarray(jnp.inf, jnp.float32),
+            score=jnp.asarray(jnp.inf, jnp.float32),
+        ),
+        ref=unit_params(sched_state),
+        staleness=jnp.asarray(config.max_staleness, jnp.int32),
+        n_drains=jnp.zeros((), jnp.int32),
+        n_proposes=jnp.zeros((), jnp.int32),
+        last_drift=jnp.zeros((), jnp.float32),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("config",), donate_argnums=(0,)
+)
+def tick(
+    state: ServeState, config: ServeConfig = ServeConfig()
+) -> Tuple[ServeState, TickInfo]:
+    """One service beat: drain -> observe -> drift-gated propose.
+
+    The input state is DONATED: its buffers are reused for the output state
+    (zero-copy advance — a regression test pins the no-growth invariant).
+    An empty ring is a true no-op on the beliefs (the Gibbs advance is
+    skipped under ``lax.cond``, so not even the PRNG key moves); the
+    propose branch runs only on posterior drift or staleness expiry.
+    """
+    drained = state.ring.count
+    has_data = drained > 0
+    batch, ring = drain(state.ring)
+
+    def advance(sched_state):
+        fleet, ll = advance_fleet(
+            sched_state.gibbs,
+            batch.times,
+            batch.fracs,
+            config.sched,
+            mask=batch.mask,
+        )
+        return (
+            sched_state._replace(gibbs=fleet, step=sched_state.step + 1),
+            ll.astype(jnp.float32),
+        )
+
+    def hold(sched_state):
+        return sched_state, jnp.zeros_like(sched_state.ewma_ll)
+
+    new_sched, ll = jax.lax.cond(has_data, advance, hold, state.sched)
+
+    cur = unit_params(new_sched)
+    drift = posterior_drift(state.ref, cur).astype(jnp.float32)
+    staleness = state.staleness + has_data.astype(jnp.int32)
+    should = has_data & (
+        (drift > config.drift_threshold) | (staleness >= config.max_staleness)
+    )
+
+    def do_propose(_):
+        fr, st = solve_fractions(
+            cur,
+            objective=config.sched.objective,
+            steps=config.sched.opt_steps,
+            lr=config.sched.opt_lr,
+            num_points=config.sched.num_points,
+            min_fraction=config.sched.min_fraction,
+        )
+        return (
+            fr.astype(jnp.float32),
+            ProposeStats(
+                e_t=st.e_t.astype(jnp.float32),
+                var=st.var.astype(jnp.float32),
+                score=st.score.astype(jnp.float32),
+            ),
+            cur,
+            jnp.zeros((), jnp.int32),
+        )
+
+    def skip(_):
+        return state.fractions, state.stats, state.ref, staleness
+
+    fractions, stats, ref, staleness = jax.lax.cond(
+        should, do_propose, skip, None
+    )
+
+    new_state = ServeState(
+        sched=new_sched,
+        ring=ring,
+        fractions=fractions,
+        stats=stats,
+        ref=ref,
+        staleness=staleness,
+        n_drains=state.n_drains + has_data.astype(jnp.int32),
+        n_proposes=state.n_proposes + should.astype(jnp.int32),
+        last_drift=drift,
+    )
+    return new_state, TickInfo(
+        ll=ll, proposed=should, drift=drift, drained=drained
+    )
+
+
+class ServiceLoop:
+    """Imperative shell of the push-mode service: jit closures built ONCE.
+
+    The loop owns a ``ServeState`` and three compiled entry points — a
+    donated ``push``, the donated fused ``tick``, and nothing else; no
+    request ever triggers a re-trace.  Published fractions live in a
+    double-buffered host slot: ``fractions()`` reads whichever buffer is
+    active without taking a lock or touching a device, so request threads
+    never wait on a Gibbs sweep (``docs/serving.md``).
+
+    ``state`` is the checkpointable pytree — hand it to
+    ``CheckpointManager.save`` and assign it back after restore.
+    """
+
+    def __init__(
+        self,
+        num_workers: int,
+        *,
+        config: Optional[ServeConfig] = None,
+        seed: int = 0,
+        state: Optional[ServeState] = None,
+    ):
+        self.config = config or ServeConfig()
+        self.state = (
+            state
+            if state is not None
+            else init(self.config, num_workers, jax.random.PRNGKey(seed))
+        )
+        # Donated push: the ring's slot buffers advance in place.
+        self._push = jax.jit(push, donate_argnums=(0,))
+        self._slots = [
+            np.asarray(self.state.fractions).copy(),
+            np.asarray(self.state.fractions).copy(),
+        ]
+        self._active = 0
+        self._version = 0
+
+    # -- ingestion (producer side) -----------------------------------------
+    def push(self, fracs, times, valid=None) -> None:
+        """Buffer one telemetry row; returns immediately (device-async)."""
+        ring = self._push(
+            self.state.ring,
+            jnp.asarray(fracs, jnp.float32),
+            jnp.asarray(times, jnp.float32),
+            None if valid is None else jnp.asarray(valid, jnp.float32),
+        )
+        self.state = self.state._replace(ring=ring)
+
+    # -- the service beat (estimator side) ---------------------------------
+    def tick(self) -> TickInfo:
+        """Drain + observe (+ propose iff the posterior moved); publish."""
+        self.state, info = tick(self.state, self.config)
+        if bool(info.proposed):  # host-syncs the tiny flag, not the fleet
+            inactive = 1 - self._active
+            self._slots[inactive][:] = np.asarray(self.state.fractions)
+            self._active = inactive  # atomic flip: readers see old or new
+            self._version += 1
+        return info
+
+    # -- publication (reader side; never blocks) ---------------------------
+    def fractions(self) -> np.ndarray:
+        """Last-good published split — a host read, no device, no lock."""
+        return self._slots[self._active]
+
+    @property
+    def version(self) -> int:
+        """Bumps once per accepted propose; readers can poll for change."""
+        return self._version
+
+    # -- observability ------------------------------------------------------
+    def counters(self) -> dict:
+        """Lifetime drain/propose/drop counters (host-syncs four scalars)."""
+        return {
+            "drains": int(self.state.n_drains),
+            "proposes": int(self.state.n_proposes),
+            "dropped": int(self.state.ring.dropped),
+            "pushes": int(self.state.ring.total),
+        }
+
+    @property
+    def num_workers(self) -> int:
+        return int(self.state.fractions.shape[0])

@@ -24,6 +24,8 @@ import numpy as np
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig, RunConfig
 from repro.sched import Objective, Scheduler, SchedulerConfig, Telemetry
+from repro.serve import ring as serve_ring
+from repro.serve.service import posterior_drift
 from repro.data.pipeline import DataIterator
 from repro.distributed.compression import make_compressor
 from repro.distributed.fault_tolerance import FaultToleranceMonitor
@@ -122,8 +124,24 @@ class Trainer:
                 heartbeat_timeout=1e9,  # simulated clock; evict on inf times
             )
             self._assign_microbatches(equal=True)
-        self._telemetry_f: List[np.ndarray] = []
-        self._telemetry_t: List[np.ndarray] = []
+            self._init_serve_state()
+
+    # ---------------------------------------------------------------- serve
+    def _init_serve_state(self) -> None:
+        """Fresh push-mode telemetry state (repro.serve): a device-resident
+        ring buffering per-step telemetry between drains, plus the propose
+        cadence — the posterior snapshot at the last split and a staleness
+        counter.  Rebuilt whenever the fleet changes shape (telemetry and
+        beliefs for the old fleet are stale)."""
+        k = self.partitioner.num_workers
+        # 2x headroom so a late drain degrades to dropped-oldest telemetry
+        # (counted in ring.dropped), never a crash or a silent mis-mask.
+        self._ring = serve_ring.ring_init(
+            2 * self.run.partitioner_refit_every, k
+        )
+        self._ref_params = self.partitioner.unit_params()
+        # Saturated staleness: the first drain always proposes.
+        self._staleness = self.run.partitioner_max_staleness
 
     # ------------------------------------------------------------------ utils
     def _assign_microbatches(self, equal: bool = False) -> np.ndarray:
@@ -145,32 +163,52 @@ class Trainer:
 
     # ------------------------------------------------------------------ resume
     def _ckpt_tree(self) -> Any:
-        """Everything checkpointed as one pytree; the scheduler's beliefs are
-        part of it, so a restart no longer forgets what the estimator learned."""
+        """Everything checkpointed as one pytree; the scheduler's beliefs AND
+        the push-mode telemetry state (ring buffer + propose cadence) are part
+        of it, so a restart neither forgets what the estimator learned nor
+        drops buffered telemetry / re-solves a split that was still fresh."""
         tree = {"params": self.params, "opt_state": self.opt_state}
         if self.partitioner is not None:
             tree["sched"] = self.partitioner.state
+            tree["serve"] = {
+                "ring": self._ring,
+                "ref": self._ref_params,
+                "staleness": jnp.asarray(self._staleness, jnp.int32),
+            }
         return tree
 
     def try_restore(self) -> bool:
         latest = self.ckpt.latest_step()
         if latest is None:
             return False
+        template = self._ckpt_tree()
         try:
-            restored, extra = self.ckpt.restore(self._ckpt_tree())
+            restored, extra = self.ckpt.restore(template)
         except ValueError:
             # Checkpoint structure drifted (partitioner toggled, legacy
-            # scheduler state layout, ...): the model-only restore still
-            # works when the checkpoint was written without scheduler
-            # leaves.  If the array layout cannot satisfy even that (e.g.
-            # the checkpoint HAS scheduler leaves of an old shape), the
-            # checkpoint is unusable — start fresh rather than crash.
+            # scheduler state layout, pre-ring telemetry, ...).  The
+            # name-keyed subset restore salvages every leaf whose key-path,
+            # shape and dtype still match — a drifted scheduler/ring leaf
+            # resets only its own subtree instead of forcing a fresh start —
+            # but the MODEL must restore completely: partial params or
+            # optimizer moments are silent corruption, not a degraded mode.
             try:
-                restored, extra = self.ckpt.restore(
-                    {"params": self.params, "opt_state": self.opt_state}
-                )
+                restored, extra, report = self.ckpt.restore_by_name(template)
+                if any(
+                    kp.startswith(("['params']", "['opt_state']"))
+                    for kp in report["skipped"]
+                ):
+                    return False
             except ValueError:
-                return False
+                # Pre-keypath checkpoint: the legacy positional model-only
+                # layout is the last resort; if even that fails, start fresh
+                # rather than crash.
+                try:
+                    restored, extra = self.ckpt.restore(
+                        {"params": self.params, "opt_state": self.opt_state}
+                    )
+                except ValueError:
+                    return False
         self.params = restored["params"]
         self.opt_state = restored["opt_state"]
         sched_state = restored.get("sched")
@@ -179,6 +217,15 @@ class Trainer:
             # (an eviction between save and restart invalidates them).
             if len(sched_state.ewma_ll) == self.partitioner.num_workers:
                 self.partitioner.state = sched_state
+                serve_tree = restored.get("serve")
+                if serve_tree is not None:
+                    self._ring = jax.tree_util.tree_map(
+                        jnp.asarray, serve_tree["ring"]
+                    )
+                    self._ref_params = jax.tree_util.tree_map(
+                        jnp.asarray, serve_tree["ref"]
+                    )
+                    self._staleness = int(serve_tree["staleness"])
                 self._assign_microbatches(equal=False)
         self.step = int(extra["step"])
         self.data.load_state_dict(extra["data_state"])
@@ -220,8 +267,17 @@ class Trainer:
                     float(np.max(times[np.isfinite(times)]))
                     if np.isfinite(times).any() else float("inf")
                 )
-                self._telemetry_f.append(fracs)
-                self._telemetry_t.append(np.where(np.isfinite(times), times, 1e6))
+                # push-mode telemetry: one device-resident ring push per
+                # step (non-finite times ride in masked-out, never as the
+                # old 1e6 sentinel), drained in whole batches below.
+                self._ring = serve_ring.push(
+                    self._ring,
+                    jnp.asarray(fracs, jnp.float32),
+                    jnp.asarray(
+                        np.where(np.isfinite(times), times, 1.0), jnp.float32
+                    ),
+                    jnp.asarray(np.isfinite(times), jnp.float32),
+                )
 
                 if flags["failures"].any():
                     # elastic: evict, re-split, checkpoint the new world
@@ -231,21 +287,35 @@ class Trainer:
                     ]
                     self.monitor.evict(flags["failures"])
                     self._assign_microbatches(equal=False)
-                    # telemetry collected for the old fleet shape is stale
-                    self._telemetry_f.clear()
-                    self._telemetry_t.clear()
+                    # telemetry + cadence state for the old fleet shape is
+                    # stale: rebuild the ring, re-anchor the drift reference
+                    self._init_serve_state()
                     self.save()
 
-                if self.step % run.partitioner_refit_every == 0 and self._telemetry_f:
-                    f = np.stack(self._telemetry_f, axis=1)  # (K, N)
-                    t = np.stack(self._telemetry_t, axis=1)
+                if (
+                    self.step % run.partitioner_refit_every == 0
+                    and int(self._ring.count) > 0
+                ):
+                    # observe on every drained batch ...
+                    batch, self._ring = serve_ring.drain(self._ring)
                     self.partitioner.observe(
-                        Telemetry(jnp.asarray(f), jnp.asarray(t))
+                        Telemetry(fracs=batch.fracs, times=batch.times),
+                        mask=batch.mask,
                     )
-                    counts = self._assign_microbatches(equal=False)
-                    splits.append(counts.copy())
-                    self._telemetry_f.clear()
-                    self._telemetry_t.clear()
+                    # ... but re-solve the split only when the posterior
+                    # actually moved (or the split got too stale) — the
+                    # repro.serve cadence policy (docs/serving.md).
+                    cur = self.partitioner.unit_params()
+                    drift = float(posterior_drift(self._ref_params, cur))
+                    self._staleness += 1
+                    if (
+                        drift > run.partitioner_drift_threshold
+                        or self._staleness >= run.partitioner_max_staleness
+                    ):
+                        counts = self._assign_microbatches(equal=False)
+                        splits.append(counts.copy())
+                        self._ref_params = cur
+                        self._staleness = 0
 
             if self.step % run.checkpoint_every == 0:
                 self.save()

@@ -51,6 +51,57 @@ def test_checkpoint_async(tmp_path):
     np.testing.assert_array_equal(np.asarray(restored["w"]), np.full(8, 7.0))
 
 
+def test_checkpoint_manifest_records_keypaths(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    tree = {"a": jnp.arange(4.0), "b": {"c": jnp.ones(2)}}
+    mgr.save(1, tree, {"step": 1})
+    manifest = json.loads(
+        (tmp_path / "step_00000001" / "manifest.json").read_text()
+    )
+    assert manifest["keypaths"] == ["['a']", "['b']['c']"]
+
+
+def test_restore_by_name_subset_on_shape_drift(tmp_path):
+    """A drifted leaf keeps its template value; matching leaves restore by
+    name even though positional order shifted — and the report says which."""
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    saved = {
+        "params": {"w": jnp.full((3,), 7.0)},
+        "sched": {"ewma_count": jnp.zeros((), jnp.int32)},  # legacy scalar
+    }
+    mgr.save(1, saved, {"step": 1})
+    template = {
+        "params": {"w": jnp.zeros((3,))},
+        "sched": {"ewma_count": jnp.ones((2,), jnp.int32)},  # now per-worker
+    }
+    tree, extra, report = mgr.restore_by_name(template)
+    np.testing.assert_array_equal(np.asarray(tree["params"]["w"]), np.full(3, 7.0))
+    np.testing.assert_array_equal(  # template kept, not the drifted scalar
+        np.asarray(tree["sched"]["ewma_count"]), np.ones(2)
+    )
+    assert report["restored"] == ["['params']['w']"]
+    assert report["skipped"] == ["['sched']['ewma_count']"]
+    assert extra["step"] == 1
+    # positional restore must refuse the same checkpoint (shape mismatch)
+    with pytest.raises(ValueError):
+        mgr.restore(template)
+
+
+def test_restore_by_name_rejects_dtype_drift_and_prekeypath(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    mgr.save(1, {"x": jnp.arange(4, dtype=jnp.int32)}, {"step": 1})
+    tree, _, report = mgr.restore_by_name({"x": jnp.zeros(4, jnp.float32)})
+    assert report["skipped"] == ["['x']"]  # same shape, wrong dtype
+    np.testing.assert_array_equal(np.asarray(tree["x"]), np.zeros(4))
+    # pre-keypath checkpoints are explicit: positional restore only
+    mpath = tmp_path / "step_00000001" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    del manifest["keypaths"]
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="predates key-path"):
+        mgr.restore_by_name({"x": jnp.zeros(4, jnp.int32)})
+
+
 def test_data_iterator_deterministic_and_resumable():
     it1 = DataIterator(vocab_size=100, seq_len=16, global_batch=8,
                        num_microbatches=2, seed=3)

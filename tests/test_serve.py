@@ -1,0 +1,258 @@
+"""The always-on serving loop (repro.serve): ring parity, cadence, memory.
+
+The load-bearing claims:
+  1. a sequence of ring drains advanced through ``gibbs_batch`` is BITWISE
+     the synchronous ``gibbs.fit`` over the same observations — push-mode
+     buffering changes when estimation runs, never what it computes;
+  2. wrap-around and overflow preserve push order and mask exactly;
+  3. the propose cadence fires on posterior drift (a worker changing
+     regime), not on steady-state sampling noise;
+  4. the donated tick/push path re-uses buffers: no per-step growth in
+     live device arrays;
+  5. the service state checkpoints and restores through CheckpointManager.
+"""
+import gc
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sched, serve
+from repro.core import gibbs
+
+N_ITERS, GRID = 3, 64
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def _stream(n, seed=0):
+    rng = np.random.default_rng(seed)
+    f = rng.uniform(0.1, 0.9, n).astype(np.float32)
+    t = (f**0.85 * 10.0 + f**0.8 * 0.5 * rng.standard_normal(n)).astype(np.float32)
+    return t, f
+
+
+# ---------------------------------------------------------------- ring parity
+def test_ring_drains_bitwise_match_synchronous_fit():
+    """N pushes + whole-batch drains == one synchronous ``fit``: bitwise."""
+    cap = 32
+    t, f = _stream(2 * cap)
+    key = jax.random.PRNGKey(7)
+
+    state = gibbs.init_state(key, mu_guess=10.0)
+    ring = serve.ring_init(cap)
+    for i in range(len(t)):
+        ring = serve.push(ring, f[i], t[i])
+        if (i + 1) % cap == 0:
+            batch, ring = serve.drain(ring)
+            state, _ = gibbs.gibbs_batch(
+                state, batch.times, batch.fracs, batch.mask,
+                n_iters=N_ITERS, grid_size=GRID,
+            )
+
+    ref, _ = gibbs.fit(
+        key, jnp.asarray(t), jnp.asarray(f),
+        batch_size=cap, n_iters=N_ITERS, grid_size=GRID, mu_guess=10.0,
+    )
+    assert _leaves_equal(state, ref)
+
+
+def test_ring_wraparound_drain_is_bitwise_batch_sequence():
+    """A drain that wraps the buffer still presents observations oldest-first
+    with a masked tail — bitwise against hand-padded ``gibbs_batch`` calls
+    over the same batch boundaries."""
+    cap = 32
+    t, f = _stream(20 + cap, seed=1)
+    key = jax.random.PRNGKey(3)
+
+    state = gibbs.init_state(key, mu_guess=10.0)
+    ring = serve.ring_init(cap)
+    for i in range(20):  # partial drain: head at 20, then wraps
+        ring = serve.push(ring, f[i], t[i])
+    batch, ring = serve.drain(ring)
+    assert int(batch.count) == 20
+    state, _ = gibbs.gibbs_batch(
+        state, batch.times, batch.fracs, batch.mask,
+        n_iters=N_ITERS, grid_size=GRID,
+    )
+    for i in range(20, 20 + cap):  # slots 20..31 then 0..19: wrapped
+        ring = serve.push(ring, f[i], t[i])
+    batch, ring = serve.drain(ring)
+    np.testing.assert_array_equal(np.asarray(batch.times), t[20:])  # push order
+    state, _ = gibbs.gibbs_batch(
+        state, batch.times, batch.fracs, batch.mask,
+        n_iters=N_ITERS, grid_size=GRID,
+    )
+
+    # reference: the same boundaries, hand-padded exactly like the ring pads
+    ref = gibbs.init_state(key, mu_guess=10.0)
+    t0 = np.concatenate([t[:20], np.full(12, 1.0, np.float32)])
+    f0 = np.concatenate([f[:20], np.full(12, 0.5, np.float32)])
+    m0 = np.concatenate([np.ones(20, np.float32), np.zeros(12, np.float32)])
+    ref, _ = gibbs.gibbs_batch(
+        ref, jnp.asarray(t0), jnp.asarray(f0), jnp.asarray(m0),
+        n_iters=N_ITERS, grid_size=GRID,
+    )
+    ref, _ = gibbs.gibbs_batch(
+        ref, jnp.asarray(t[20:]), jnp.asarray(f[20:]),
+        jnp.ones(cap, jnp.float32), n_iters=N_ITERS, grid_size=GRID,
+    )
+    assert _leaves_equal(state, ref)
+
+
+def test_ring_overflow_drops_oldest_and_counts():
+    ring = serve.ring_init(4)
+    for i in range(6):
+        ring = serve.push(ring, 0.5, 10.0 + i)
+    assert int(ring.dropped) == 2
+    assert int(ring.total) == 6
+    batch, ring = serve.drain(ring)
+    # the two OLDEST entries (10, 11) were overwritten; order preserved
+    np.testing.assert_array_equal(np.asarray(batch.times), [12.0, 13.0, 14.0, 15.0])
+    np.testing.assert_array_equal(np.asarray(batch.mask), np.ones(4))
+    assert int(ring.count) == 0
+
+
+def test_fleet_ring_layout_and_validity_mask():
+    """Fleet drains come out worker-major with per-element validity folded
+    into the mask — the exact telemetry layout ``sched.observe`` accepts."""
+    ring = serve.ring_init(3, num_workers=2)
+    ring = serve.push(ring, [0.6, 0.4], [3.0, np.inf], valid=[1.0, 0.0])
+    ring = serve.push(ring, [0.5, 0.5], [2.0, 4.0])
+    batch, _ = serve.drain(ring)
+    assert batch.times.shape == (2, 3)  # (K, capacity)
+    np.testing.assert_array_equal(np.asarray(batch.times[0]), [3.0, 2.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(batch.mask), [[1, 1, 0], [0, 1, 0]])
+    # the invalid inf never got stored (0 * inf = nan would leak)
+    assert np.isfinite(np.asarray(batch.times)).all()
+
+
+# ------------------------------------------------------------------- cadence
+def _steady_cfg(**kw):
+    base = dict(
+        sched=sched.SchedulerConfig(n_iters=4, grid_size=64, num_points=128,
+                                    opt_steps=40, mu_guess=3.0),
+        capacity=8, drift_threshold=0.25, max_staleness=100,
+    )
+    base.update(kw)
+    return serve.ServeConfig(**base)
+
+
+def _push_rounds(loop, mu, rounds, rng):
+    fr = np.full(len(mu), 1.0 / len(mu), np.float32)
+    infos = []
+    for _ in range(rounds):
+        for _ in range(loop.config.capacity):
+            times = fr**0.9 * mu + fr**0.8 * 0.05 * mu * rng.standard_normal(len(mu))
+            loop.push(fr, times.astype(np.float32))
+        infos.append(loop.tick())
+    return infos
+
+
+def test_cadence_fires_on_drift_not_steady_state_noise():
+    rng = np.random.default_rng(0)
+    mu = np.array([2.0, 4.0, 6.0])
+    loop = serve.ServiceLoop(3, config=_steady_cfg(), seed=2)
+
+    infos = _push_rounds(loop, mu, 8, rng)
+    assert bool(infos[0].proposed)  # saturated staleness: first drain solves
+    late = [bool(i.proposed) for i in infos[4:]]
+    assert not all(late), "steady-state sampling noise must not re-solve"
+
+    v0 = loop.version
+    mu_shift = mu * np.array([4.0, 1.0, 1.0])  # worker 0 changes regime
+    infos = _push_rounds(loop, mu_shift, 2, rng)
+    assert any(bool(i.proposed) for i in infos), "regime change must re-solve"
+    assert max(float(i.drift) for i in infos) > loop.config.drift_threshold
+    assert loop.version > v0  # the new split was published
+
+
+def test_empty_tick_is_noop_on_beliefs():
+    loop = serve.ServiceLoop(2, config=_steady_cfg(), seed=0)
+    before = jax.tree_util.tree_map(
+        lambda x: np.asarray(x).copy(), loop.state.sched
+    )
+    info = loop.tick()  # nothing buffered
+    assert int(info.drained) == 0 and not bool(info.proposed)
+    assert _leaves_equal(before, loop.state.sched)  # not even the PRNG moved
+    assert loop.counters()["drains"] == 0
+
+
+def test_service_loop_learns_split_end_to_end():
+    rng = np.random.default_rng(1)
+    mu = np.array([2.0, 8.0])  # worker 0 is 4x faster
+    loop = serve.ServiceLoop(2, config=_steady_cfg(max_staleness=4), seed=3)
+    _push_rounds(loop, mu, 10, rng)
+    fr = loop.fractions()
+    assert fr[0] > fr[1]  # the fast worker carries more
+    np.testing.assert_array_equal(fr, np.asarray(loop.state.fractions))
+    c = loop.counters()
+    assert c["drains"] == 10 and 1 <= c["proposes"] <= c["drains"]
+    assert c["pushes"] == 10 * loop.config.capacity and c["dropped"] == 0
+
+
+# ------------------------------------------------------------ donation/memory
+def test_no_live_buffer_growth_across_ticks():
+    """The donated push/tick path must re-use state buffers: the number of
+    live device arrays is flat across service cycles (no per-step growth)."""
+    rng = np.random.default_rng(0)
+    mu = np.array([2.0, 4.0])
+    loop = serve.ServiceLoop(2, config=_steady_cfg(), seed=0)
+    _push_rounds(loop, mu, 2, rng)  # warm both cond branches + caches
+    gc.collect()
+    base = len(jax.live_arrays())
+    for _ in range(6):
+        _push_rounds(loop, mu, 1, rng)
+    gc.collect()
+    assert len(jax.live_arrays()) <= base
+
+
+# -------------------------------------------------------------- checkpointing
+def test_serve_state_checkpoints_and_resumes_bitwise(tmp_path):
+    from repro.checkpoint.checkpoint import CheckpointManager
+
+    rng = np.random.default_rng(2)
+    mu = np.array([3.0, 5.0])
+    loop = serve.ServiceLoop(2, config=_steady_cfg(), seed=4)
+    _push_rounds(loop, mu, 3, rng)
+    # leave telemetry BUFFERED so restore must bring the ring back too
+    fr = np.full(2, 0.5, np.float32)
+    loop.push(fr, (fr**0.9 * mu).astype(np.float32))
+
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(1, loop.state._asdict(), {"step": 1})
+    ckpt.wait()
+
+    template = serve.init(loop.config, 2, jax.random.PRNGKey(4))._asdict()
+    restored, _ = ckpt.restore(template)
+    state2 = serve.ServeState(**restored)
+    assert _leaves_equal(loop.state, state2)
+
+    # both copies tick identically from here
+    loop2 = serve.ServiceLoop(2, config=loop.config, state=state2)
+    i1, i2 = loop.tick(), loop2.tick()
+    assert int(i1.drained) == int(i2.drained) == 1
+    assert _leaves_equal(loop.state, loop2.state)
+
+
+# ------------------------------------------------------------------ the driver
+def test_launch_serve_smoke_subprocess():
+    """``python -m repro.launch.serve --serve-smoke`` is the shippable proof:
+    real model serving rounds fed through the service, at least one propose
+    AND at least one drift-gated skip, exit 0."""
+    repo = Path(__file__).resolve().parents[1]
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--serve-smoke"],
+        capture_output=True, text=True, timeout=600,
+        cwd=repo, env={**__import__("os").environ, "PYTHONPATH": "src"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "serve-smoke OK" in proc.stdout

@@ -79,11 +79,13 @@ def test_checkpoint_restart_resumes_exactly(tmp_path):
     np.testing.assert_allclose(loss_resumed, loss_ref, rtol=1e-4)
 
 
-def test_try_restore_degrades_gracefully_on_legacy_checkpoint(tmp_path):
+def test_try_restore_salvages_params_from_shape_drifted_checkpoint(tmp_path):
     """A checkpoint whose scheduler leaves have a drifted shape (e.g. the
-    pre-PR-4 fleet-global scalar ewma_count) is unusable: try_restore must
-    report False and let training start fresh — not crash at restore time,
-    and not limp along with wrong-shaped beliefs until the first eviction."""
+    pre-PR-4 fleet-global scalar ewma_count) must still give back its
+    perfectly valid model params: the name-keyed subset restore resets only
+    the drifted leaf, adopts everything else, and training resumes — no
+    crash, no silent wrong-shaped beliefs, and no fresh start for the model."""
+    import jax
     import jax.numpy as jnp
 
     run = _run_cfg(tmp_path, steps=8)
@@ -101,6 +103,51 @@ def test_try_restore_degrades_gracefully_on_legacy_checkpoint(tmp_path):
         {"step": tr.step, "data_state": tr.data.state_dict()},
     )
     tr.ckpt.wait()
+
+    tr2 = Trainer(run, cluster=mk_cluster(), num_microbatches=4)
+    assert tr2.try_restore() is True  # model params salvaged by name
+    ref_leaves = jax.tree_util.tree_leaves(tr.params)
+    got_leaves = jax.tree_util.tree_leaves(tr2.params)
+    assert all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(ref_leaves, got_leaves)
+    )
+    # the drifted leaf reset to the fresh template shape, rest adopted
+    assert tr2.partitioner.state.ewma_count.shape == (2,)
+    assert np.all(np.asarray(tr2.partitioner.state.ewma_count) == 0)
+    rep = tr2.train(2)
+    assert np.isfinite(rep.losses[-1])
+
+
+def test_try_restore_fresh_start_on_pre_keypath_checkpoint(tmp_path):
+    """Checkpoints written before key-path manifests (no ``keypaths`` entry)
+    cannot be matched by name; with a drifted structure the positional
+    model-only fallback is tried, and an unusable layout means a fresh
+    start — reported honestly as False, never a crash."""
+    import json
+
+    import jax.numpy as jnp
+
+    run = _run_cfg(tmp_path, steps=8)
+    mk_cluster = lambda: SimulatedCluster(
+        [WorkerSpec(5.0, 0.5), WorkerSpec(6.0, 0.5)], seed=4
+    )
+    tr = Trainer(run, cluster=mk_cluster(), num_microbatches=4)
+    tr.train(2)
+    legacy_sched = tr.partitioner.state._replace(
+        ewma_count=jnp.zeros((), jnp.int32)
+    )
+    tr.ckpt.save(
+        tr.step,
+        {"params": tr.params, "opt_state": tr.opt_state, "sched": legacy_sched},
+        {"step": tr.step, "data_state": tr.data.state_dict()},
+    )
+    tr.ckpt.wait()
+    # age the manifest back to the pre-keypath era
+    mpath = tmp_path / f"step_{tr.step:08d}" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    del manifest["keypaths"]
+    mpath.write_text(json.dumps(manifest))
 
     tr2 = Trainer(run, cluster=mk_cluster(), num_microbatches=4)
     assert tr2.try_restore() is False  # unusable, reported honestly
