@@ -1,0 +1,108 @@
+"""Hierarchical-pooling benchmark: cold-start transfer + surprise latency.
+
+Two row families for the BENCH artifact (``benchmarks.run --smoke``):
+
+  * **cold-start observations-to-convergence** — the ISSUE's acceptance
+    scenario measured, not just asserted: converge a K=16 fleet of
+    identical workers, admit one newcomer with and without hierarchical
+    pooling, and count the observations the newcomer needs before its
+    proposed fraction is within 10% of its oracle share (1/17).  The
+    pooled admit must converge in <= half the global-prior admit's
+    observations (``hier_cold_start_ratio``).
+  * **surprise-scoring latency** — the per-drain cost the serve loop's
+    drift gate pays for the fleet-size-invariant statistic, at
+    K = 10^2..10^4 (jitted, device-resident, O(K) elementwise math — it
+    must stay microseconds even at 10^4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro import hier, sched
+from repro.core import gibbs
+
+
+def _telemetry(rng, fracs, mu=800.0, n=16):
+    fmat = np.tile(np.asarray(fracs, np.float32)[:, None], (1, n))
+    tmat = fmat**0.9 * mu * (1.0 + 0.02 * rng.standard_normal(fmat.shape))
+    return sched.Telemetry(
+        jnp.asarray(fmat, jnp.float32), jnp.asarray(tmat, jnp.float32)
+    )
+
+
+def _explore_telemetry(rng, k, mu=800.0, n=16):
+    fmat = rng.uniform(0.05, 0.9, (k, n)).astype(np.float32)
+    tmat = fmat**0.9 * mu * (1.0 + 0.02 * rng.standard_normal(fmat.shape))
+    return sched.Telemetry(
+        jnp.asarray(fmat, jnp.float32), jnp.asarray(tmat, jnp.float32)
+    )
+
+
+def _obs_to_band(scheduler, oracle, rng, n=4, max_cycles=15):
+    for cycle in range(max_cycles + 1):
+        fr, _, _ = scheduler.propose_fractions()
+        if abs(fr[-1] - oracle) <= 0.1 * oracle:
+            return cycle * n
+        scheduler.observe(_telemetry(rng, fr, n=n))
+    return (max_cycles + 1) * n
+
+
+def cold_start_main() -> None:
+    import dataclasses
+
+    cfg = sched.SchedulerConfig(
+        n_iters=3, grid_size=32, num_points=64, opt_steps=30, mu_guess=1.0
+    )
+    rng = np.random.default_rng(0)
+    base = sched.Scheduler(16, config=cfg, seed=0)
+    for _ in range(8):
+        base.observe(_explore_telemetry(rng, 16))
+
+    oracle = 1.0 / 17.0
+    obs = {}
+    for label, hierarchical in (("pooled", True), ("global", False)):
+        s = sched.Scheduler(
+            1, config=dataclasses.replace(cfg, hierarchical=hierarchical)
+        )
+        s.state = base.state  # immutable pytree: share-then-diverge
+        s.add_workers(1, seed=7)
+        cap = 16 * 4  # (max_cycles + 1) * n: right-censored if never in band
+        obs[label] = _obs_to_band(s, oracle, np.random.default_rng(1))
+        note = " [censored at budget]" if obs[label] >= cap else ""
+        emit(
+            f"hier_cold_start_{label}_obs", obs[label],
+            "newcomer observations to within 10% of oracle fraction "
+            f"(K=16 converged fleet, hierarchical={hierarchical}){note}",
+        )
+    ratio = obs["pooled"] / max(obs["global"], 1)
+    emit(
+        "hier_cold_start_ratio", ratio,
+        f"pooled/global observations-to-convergence "
+        f"({obs['pooled']}/{obs['global']}); acceptance: <= 0.5",
+    )
+
+
+def surprise_main() -> None:
+    for k in (100, 1_000, 10_000):
+        key = jax.random.PRNGKey(0)
+        f = jax.random.uniform(key, (k, 16), minval=0.1, maxval=0.9)
+        t = f**0.9 * 4.0
+        fleet, _ = gibbs.fit_fleet(key, t, f, n_iters=1, grid_size=32)
+        hyper = hier.fit_hyperprior(fleet)
+        us = time_fn(lambda: hier.surprise(fleet, hyper))
+        emit(f"hier_surprise_k{k}", us, "per-drain drift scoring, (K,) out")
+        us = time_fn(lambda: hier.fit_hyperprior(fleet))
+        emit(f"hier_refit_k{k}", us, "hyperprior refit from fleet posteriors")
+
+
+def main() -> None:
+    cold_start_main()
+    surprise_main()
+
+
+if __name__ == "__main__":
+    main()

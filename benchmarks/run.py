@@ -22,6 +22,7 @@ from benchmarks import (
     bench_dag,
     bench_frontier,
     bench_gibbs_convergence,
+    bench_hier,
     bench_kernels,
     bench_partitioner,
     bench_posterior_approx,
@@ -39,6 +40,7 @@ ALL = [
     ("dag_engine", bench_dag.main),
     ("train_step", bench_train_step.main),
     ("serve_loop", bench_serve.main),
+    ("hier_pooling", bench_hier.main),
 ]
 
 SMOKE = [
@@ -48,6 +50,7 @@ SMOKE = [
     ("gibbs_fleet_engine", bench_gibbs_convergence.fleet_main),
     ("dag_stacked_engine", bench_dag.smoke_main),
     ("serve_loop", bench_serve.main),
+    ("hier_pooling", bench_hier.main),
 ]
 
 

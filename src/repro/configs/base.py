@@ -125,8 +125,11 @@ class RunConfig:
     partitioner_refit_every: int = 16  # drain cadence (steps per ring drain)
     # propose cadence (repro.serve drift gate): re-solve the split only when
     # the posterior moved more than the threshold since the last solve, or
-    # after max_staleness drains — whichever comes first.
-    partitioner_drift_threshold: float = 0.02
+    # after max_staleness drains — whichever comes first.  None opts into
+    # the self-calibrating EWMA gate (repro.serve.gate): the drift statistic
+    # is scored against its own observed steady-state level instead of a
+    # hand-tuned constant.
+    partitioner_drift_threshold: Optional[float] = 0.02
     partitioner_max_staleness: int = 4
     # fault tolerance
     checkpoint_every: int = 100

@@ -1,0 +1,64 @@
+"""Fleet hyperprior: hierarchical empirical-Bayes pooling across workers.
+
+The inference layer between the per-worker estimator (``repro.core.gibbs``)
+and the scheduler (``repro.sched``): :func:`fit_hyperprior` pools the
+per-worker posteriors into fleet-level hyperparameters, :func:`shrink`
+blends cold workers toward the fleet mean with an effective-sample-size
+weight, and :func:`surprise` scores each worker against the pooled prior —
+the drift statistic behind the self-calibrating serve gate.  Opt in via
+``sched.SchedulerConfig(hierarchical=True)``; derivations in
+``docs/hierarchy.md``.
+
+>>> import jax, jax.numpy as jnp
+>>> from repro import hier
+>>> from repro.core import gibbs
+>>> key = jax.random.PRNGKey(0)
+>>> f = jax.random.uniform(key, (8, 48), minval=0.1, maxval=0.9)
+>>> t = f**0.9 * 4.0                         # 8 near-identical workers
+>>> fleet, _ = gibbs.fit_fleet(key, t, f, n_iters=3, grid_size=64)
+>>> hyper = hier.fit_hyperprior(fleet)       # pooled fleet prior
+>>> bool(abs(float(hyper.ng.mu0) - 4.0) < 1.0)
+True
+>>> cold = gibbs.init_state(jax.random.PRNGKey(1), mu_guess=1.0)
+>>> cold_fleet = jax.tree_util.tree_map(lambda x: x[None], cold)
+>>> warm = hier.shrink(cold_fleet, hyper)    # ess 0 -> lands on the pool
+>>> bool(abs(float(warm.ng.mu0[0]) - float(hyper.ng.mu0)) < 1e-5)
+True
+>>> s = hier.surprise(fleet, hyper)          # (K,) drift scores, all small
+>>> s.shape
+(8,)
+>>> noop = hier.shrink(fleet, hyper, weight=0.0)   # weight 0: bitwise no-op
+>>> bool(jnp.all(noop.ng.mu0 == fleet.ng.mu0))
+True
+"""
+from .hyperprior import (
+    DEFAULT_STRENGTH,
+    Hyperprior,
+    HyperStats,
+    effective_sample_size,
+    fit_hyperprior,
+    fit_hyperprior_sharded,
+    hyper_from_stats,
+    hyper_init,
+    hyper_stats,
+    init_from_hyperprior,
+    shrink,
+    shrinkage_weight,
+    surprise,
+)
+
+__all__ = [
+    "DEFAULT_STRENGTH",
+    "Hyperprior",
+    "HyperStats",
+    "effective_sample_size",
+    "fit_hyperprior",
+    "fit_hyperprior_sharded",
+    "hyper_from_stats",
+    "hyper_init",
+    "hyper_stats",
+    "init_from_hyperprior",
+    "shrink",
+    "shrinkage_weight",
+    "surprise",
+]

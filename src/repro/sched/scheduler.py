@@ -94,6 +94,13 @@ class SchedulerConfig:
     opt_lr: float = 0.05
     num_points: int = 512  # quadrature points for objective evaluation
     min_fraction: float = 5e-3  # proposal floor per worker (see solve_fractions)
+    hierarchical: bool = False  # pool strength across the fleet (repro.hier):
+    # add_workers admits newcomers from the empirical-Bayes fleet hyperprior
+    # instead of the global prior, and the serve loop's drift gate scores
+    # per-worker surprise against it.  False = bitwise-legacy everywhere.
+    hyper_strength: float = 8.0  # fleet-prior pseudo-observations: a worker
+    # needs ~this many of its own observations to outvote the pool (shrink)
+    hyper_refit_every: int = 4  # drains between hyperprior refits (serve/train)
 
     def __post_init__(self):
         if self.mesh is not None and not isinstance(self.mesh, ShardingConfig):
@@ -453,20 +460,40 @@ def add_workers(
     *,
     key: Optional[Array] = None,
     mu_guess: Optional[float] = None,
+    hyper=None,
 ) -> SchedulerState:
     """Admit new workers with fresh priors (elastic up-scale).
 
     The new workers' prior draws come from the scheduler's own PRNG stream
     unless an explicit ``key`` is supplied; ``mu_guess`` overrides the
     config's prior center (e.g. seeding admits at the fleet's known speed).
+
+    With ``config.hierarchical`` the newcomers are instead born from the
+    empirical-Bayes fleet hyperprior (``repro.hier``): their Normal-Gamma
+    and exponent priors are pooled from the incumbents' posteriors
+    (refit here unless a pre-fit ``hyper`` is passed), so their first
+    ``propose`` already reflects what the fleet knows — the cold-start
+    transfer path.  ``hierarchical=False`` is the bitwise-legacy global
+    prior.
     """
     if key is None:
         key, sub = jax.random.split(state.key)
     else:
         key, sub = state.key, key
-    keys = jax.random.split(sub, count)
-    guess = config.mu_guess if mu_guess is None else mu_guess
-    fresh = jax.vmap(lambda k: gibbs.init_state(k, mu_guess=guess))(keys)
+    if config.hierarchical:
+        from repro import hier
+
+        if hyper is None:
+            hyper = (
+                hier.fit_hyperprior_sharded(state.gibbs, config.mesh)
+                if config.mesh is not None
+                else hier.fit_hyperprior(state.gibbs)
+            )
+        fresh = hier.init_from_hyperprior(sub, count, hyper)
+    else:
+        keys = jax.random.split(sub, count)
+        guess = config.mu_guess if mu_guess is None else mu_guess
+        fresh = jax.vmap(lambda k: gibbs.init_state(k, mu_guess=guess))(keys)
     cat = lambda a, b: jnp.concatenate([jnp.asarray(a), b], axis=0)
     return state._replace(
         gibbs=jax.tree_util.tree_map(cat, state.gibbs, fresh),
@@ -565,6 +592,38 @@ class Scheduler:
                 threshold_sigma,
                 None if valid is None else jnp.asarray(valid),
             )
+        )
+
+    # -- hierarchical pooling (repro.hier) ---------------------------------
+    def fit_hyperprior(self):
+        """Pool the current per-worker posteriors into a fleet hyperprior."""
+        from repro import hier
+
+        if self.config.mesh is not None:
+            return hier.fit_hyperprior_sharded(self.state.gibbs, self.config.mesh)
+        return hier.fit_hyperprior(self.state.gibbs)
+
+    def shrink(self, hyper=None) -> None:
+        """Blend cold workers toward the fleet prior (ESS-weighted)."""
+        from repro import hier
+
+        hyper = hyper if hyper is not None else self.fit_hyperprior()
+        self.state = self.state._replace(
+            gibbs=hier.shrink(
+                self.state.gibbs,
+                hyper,
+                strength=self.config.hyper_strength,
+                sharding=self.config.mesh,
+            )
+        )
+
+    def surprise(self, hyper=None) -> np.ndarray:
+        """Per-worker drift scores against the pooled prior."""
+        from repro import hier
+
+        hyper = hyper if hyper is not None else self.fit_hyperprior()
+        return np.asarray(
+            hier.surprise(self.state.gibbs, hyper, sharding=self.config.mesh)
         )
 
     # -- elastic membership ------------------------------------------------

@@ -4,7 +4,11 @@ Push-mode path for fleets that feed telemetry continuously and cannot block
 on a Gibbs sweep: a device-resident ``TelemetryRing`` buffers observations,
 ``tick`` drains whole batches through the fleet-native estimator, and the
 simplex solve re-runs only when the posterior actually moved (drift-gated
-cadence with a hard staleness cap).  See ``docs/serving.md``.
+cadence with a hard staleness cap).  The gate self-calibrates by default —
+an online EWMA baseline of the drift statistic (``repro.serve.gate``)
+replaces the fleet-size-dependent fixed threshold; pass an explicit
+``drift_threshold`` for the legacy fixed gate.  See ``docs/serving.md``
+and ``docs/hierarchy.md``.
 
 >>> import jax, jax.numpy as jnp
 >>> from repro import serve, sched
@@ -27,6 +31,7 @@ True
 >>> bool(abs(float(loop.fractions().sum()) - 1.0) < 1e-5)
 True
 """
+from .gate import GateState, gate_init, gate_threshold, gate_update
 from .ring import DrainedBatch, TelemetryRing, drain, push, ring_init
 from .service import (
     ServeConfig,
@@ -40,12 +45,16 @@ from .service import (
 
 __all__ = [
     "DrainedBatch",
+    "GateState",
     "ServeConfig",
     "ServeState",
     "ServiceLoop",
     "TelemetryRing",
     "TickInfo",
     "drain",
+    "gate_init",
+    "gate_threshold",
+    "gate_update",
     "init",
     "posterior_drift",
     "push",

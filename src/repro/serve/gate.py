@@ -1,0 +1,99 @@
+"""Online-calibrated drift gate: EWMA baseline instead of a fixed threshold.
+
+The PR 6 drift gate compared a max-over-workers statistic against a fixed
+``drift_threshold``.  That number is fleet-size-dependent twice over: the
+max of K per-worker scores grows like the K-th extreme value, and the
+worst-worker jitter is environment-sensitive (reduction-order float shifts
+steer the chaotic Gibbs chains) — which is why ``bench_serve`` had to
+hand-tune ``0.75`` at K < 10^4 and ``10.0`` above.  This module replaces
+the constant with an *online estimate of the steady-state drift level*:
+
+  * ``GateState`` tracks an EWMA mean and an EWMA squared deviation of the
+    gate statistic (three scalars — checkpointable, donation-friendly);
+  * :func:`gate_update` fires when the statistic exceeds
+    ``mean + z * (sd + rel_floor * |mean| + abs_floor)`` — a z-score test
+    against the *observed* null level, so the same configuration yields a
+    stable skip rate at K = 10^2 and K = 10^4 (regression-tested);
+  * fired statistics are NOT absorbed into the baseline (a regime change
+    must not teach the gate that drift is normal), and the first
+    ``warmup`` statistics only calibrate — the staleness backstop owns
+    proposing until the baseline exists.
+
+Pure jnp throughout: the serve ``tick`` runs it inside jit, the Trainer
+runs the identical functions host-side.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+DEFAULT_GATE_Z = 4.0
+DEFAULT_GATE_WARMUP = 3
+DEFAULT_GATE_DECAY = 0.9
+_REL_FLOOR = 0.05
+_ABS_FLOOR = 1e-6
+
+
+class GateState(NamedTuple):
+    """EWMA baseline of the drift statistic; a tiny all-scalar pytree."""
+
+    mean: Array  # float32, EWMA of the statistic
+    var: Array  # float32, EWMA of squared deviation from the mean
+    count: Array  # int32, statistics folded into the baseline
+
+
+def gate_init() -> GateState:
+    return GateState(
+        mean=jnp.zeros((), jnp.float32),
+        var=jnp.zeros((), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def gate_threshold(gate: GateState, *, z: float = DEFAULT_GATE_Z) -> Array:
+    """Current firing level: ``mean + z * (sd + floors)``.
+
+    The relative floor keeps a near-deterministic steady state (EWMA
+    variance ~ 0) from firing on the first ulp of jitter; the absolute
+    floor does the same for a statistic that sits at zero.
+    """
+    sd = jnp.sqrt(jnp.maximum(gate.var, 0.0))
+    return gate.mean + z * (sd + _REL_FLOOR * jnp.abs(gate.mean) + _ABS_FLOOR)
+
+
+def gate_update(
+    gate: GateState,
+    stat: Array,
+    *,
+    z: float = DEFAULT_GATE_Z,
+    warmup: int = DEFAULT_GATE_WARMUP,
+    decay: float = DEFAULT_GATE_DECAY,
+    update: Array = True,
+) -> Tuple[Array, GateState]:
+    """Score one statistic against the calibrated baseline; returns (fire, gate).
+
+    ``update`` masks the whole call (e.g. an empty drain carries no
+    statistic): when false, nothing fires and nothing is absorbed.  A
+    fired statistic never updates the baseline; the first observed
+    statistic seeds the EWMA directly (the ``anomaly`` freshness trick).
+    Pure and jit-compatible; also usable with host floats.
+    """
+    stat = jnp.asarray(stat, jnp.float32)
+    update = jnp.asarray(update, bool)
+    warm = gate.count >= warmup
+    fire = update & warm & (stat > gate_threshold(gate, z=z))
+
+    fresh = gate.count == 0
+    dev = stat - gate.mean
+    mean_next = jnp.where(fresh, stat, decay * gate.mean + (1.0 - decay) * stat)
+    var_next = jnp.where(fresh, 0.0, decay * gate.var + (1.0 - decay) * dev * dev)
+    absorb = update & ~fire
+    return fire, GateState(
+        mean=jnp.where(absorb, mean_next, gate.mean),
+        var=jnp.where(absorb, var_next, gate.var),
+        count=gate.count + absorb.astype(jnp.int32),
+    )

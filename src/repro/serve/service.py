@@ -10,10 +10,13 @@ This module splits the two rates:
     the whole buffer through the fleet-native ``gibbs_batch`` via
     ``sched.advance_fleet`` (masked tail, identical semantics to
     ``sched.observe``);
-  * **propose only when posteriors move** — a symmetrized-KL drift metric
-    between the posterior point estimates at the last propose and now gates
-    the simplex solve (``lax.cond``), with a hard ``max_staleness`` so a
-    slowly-drifting fleet can never pin a stale split forever;
+  * **propose only when posteriors move** — a drift statistic (the
+    symmetrized-KL metric, or the max per-worker ``hier.surprise`` when
+    hierarchical pooling is on) gates the simplex solve (``lax.cond``)
+    against a self-calibrating EWMA baseline (``repro.serve.gate``; a
+    fixed ``drift_threshold`` remains available), with a hard
+    ``max_staleness`` so a slowly-drifting fleet can never pin a stale
+    split forever;
   * **readers never block** — the last-good fractions live in a
     double-buffered host slot (``ServiceLoop.fractions()``); a reader dips
     into whichever buffer is active while the ticker fills the other.
@@ -44,7 +47,21 @@ from repro.sched.scheduler import (
     unit_params,
 )
 from repro.sched import scheduler as _sched
+from repro.hier.hyperprior import (
+    Hyperprior,
+    fit_hyperprior,
+    hyper_init,
+    _surprise_body,
+)
 
+from .gate import (
+    DEFAULT_GATE_DECAY,
+    DEFAULT_GATE_WARMUP,
+    DEFAULT_GATE_Z,
+    GateState,
+    gate_init,
+    gate_update,
+)
 from .ring import TelemetryRing, drain, push, ring_init
 
 Array = jax.Array
@@ -54,17 +71,30 @@ Array = jax.Array
 class ServeConfig:
     """Static service knobs; hashable, jit-static like ``SchedulerConfig``.
 
-    ``drift_threshold`` gates re-solving the split: ``tick`` re-runs
-    ``propose`` only when the posterior drift since the last solve exceeds
-    it (or the split is ``max_staleness`` drains old).  Drift is the max
-    over workers of a symmetrized Normal KL on (mu, sigma) plus squared
-    shifts of the exponent means — see :func:`posterior_drift`.
+    The drift gate decides when ``tick`` re-solves the split.  With
+    ``drift_threshold=None`` (the default) the gate is SELF-CALIBRATING:
+    each tick's drift statistic is scored against an online EWMA baseline
+    of its own steady-state level (``repro.serve.gate``), so the same
+    configuration yields a stable skip rate at K = 10^2 and K = 10^4.
+    Set ``drift_threshold`` to a float to keep the fixed-threshold PR 6
+    behavior (the gate state is then never touched).
+
+    The statistic itself depends on ``sched.hierarchical``: the legacy
+    max-over-workers posterior KL (:func:`posterior_drift`) by default, or
+    the max per-worker ``hier.surprise`` against the pooled fleet
+    hyperprior when hierarchical pooling is on — the latter's per-worker
+    null level does not grow with K.  ``max_staleness`` is the hard cap on
+    drains between proposes either way, and owns proposing during the
+    calibrated gate's ``gate_warmup`` ticks.
     """
 
     sched: SchedulerConfig = SchedulerConfig()
     capacity: int = 64  # ring slots buffered between drains
-    drift_threshold: float = 0.1
+    drift_threshold: Optional[float] = None  # None = self-calibrating gate
     max_staleness: int = 8  # hard cap: drains between proposes
+    gate_z: float = DEFAULT_GATE_Z  # z-score the calibrated gate fires at
+    gate_warmup: int = DEFAULT_GATE_WARMUP  # stats observed before firing
+    gate_decay: float = DEFAULT_GATE_DECAY  # EWMA decay of the baseline
 
 
 class ServeState(NamedTuple):
@@ -79,6 +109,9 @@ class ServeState(NamedTuple):
     n_drains: Array  # int32, lifetime non-empty drains
     n_proposes: Array  # int32, lifetime proposes
     last_drift: Array  # float32, drift measured at the last tick
+    gate: GateState  # EWMA baseline of the drift statistic
+    hyper: Hyperprior  # pooled fleet prior (refit every hyper_refit_every)
+    hyper_age: Array  # int32, drains since the last hyperprior refit
 
 
 class TickInfo(NamedTuple):
@@ -86,7 +119,7 @@ class TickInfo(NamedTuple):
 
     ll: Array  # (K,) per-worker log-likelihood of the drained batch
     proposed: Array  # bool: did this tick re-solve the split?
-    drift: Array  # float32 posterior drift vs the last propose
+    drift: Array  # float32 gate statistic (KL drift or max surprise)
     drained: Array  # int32 observations consumed from the ring
 
 
@@ -133,6 +166,15 @@ def init(config: ServeConfig, num_workers: int, key: Array) -> ServeState:
         n_drains=jnp.zeros((), jnp.int32),
         n_proposes=jnp.zeros((), jnp.int32),
         last_drift=jnp.zeros((), jnp.float32),
+        gate=gate_init(),
+        # Global prior as a structurally-stable hyperprior placeholder
+        # (canonical float32 so both lax.cond refit branches agree), with
+        # the age saturated so the first data tick refits immediately.
+        hyper=jax.tree_util.tree_map(
+            lambda x: jnp.asarray(x, jnp.float32),
+            hyper_init(config.sched.mu_guess),
+        ),
+        hyper_age=jnp.asarray(config.sched.hyper_refit_every, jnp.int32),
     )
 
 
@@ -173,11 +215,49 @@ def tick(
     new_sched, ll = jax.lax.cond(has_data, advance, hold, state.sched)
 
     cur = unit_params(new_sched)
-    drift = posterior_drift(state.ref, cur).astype(jnp.float32)
+    # -- gate statistic (static branch: config is jit-static) ---------------
+    if config.sched.hierarchical:
+        # Refit the pooled fleet prior every hyper_refit_every drains,
+        # then score each worker against it; fleet drift = max surprise.
+        refit_due = has_data & (
+            state.hyper_age >= config.sched.hyper_refit_every
+        )
+        hyper = jax.lax.cond(
+            refit_due,
+            lambda _: fit_hyperprior(new_sched.gibbs),
+            lambda _: state.hyper,
+            None,
+        )
+        hyper_age = jnp.where(
+            refit_due,
+            jnp.zeros((), jnp.int32),
+            state.hyper_age + has_data.astype(jnp.int32),
+        )
+        drift = jnp.max(_surprise_body(new_sched.gibbs, hyper)).astype(
+            jnp.float32
+        )
+    else:
+        hyper, hyper_age = state.hyper, state.hyper_age
+        drift = posterior_drift(state.ref, cur).astype(jnp.float32)
+
     staleness = state.staleness + has_data.astype(jnp.int32)
-    should = has_data & (
-        (drift > config.drift_threshold) | (staleness >= config.max_staleness)
-    )
+    # -- gate decision (static branch on the configured threshold) ----------
+    if config.drift_threshold is None:
+        fire, gate = gate_update(
+            state.gate,
+            drift,
+            z=config.gate_z,
+            warmup=config.gate_warmup,
+            decay=config.gate_decay,
+            update=has_data,
+        )
+        should = has_data & (fire | (staleness >= config.max_staleness))
+    else:
+        gate = state.gate  # fixed threshold: the baseline is never touched
+        should = has_data & (
+            (drift > config.drift_threshold)
+            | (staleness >= config.max_staleness)
+        )
 
     def do_propose(_):
         fr, st = solve_fractions(
@@ -216,6 +296,9 @@ def tick(
         n_drains=state.n_drains + has_data.astype(jnp.int32),
         n_proposes=state.n_proposes + should.astype(jnp.int32),
         last_drift=drift,
+        gate=gate,
+        hyper=hyper,
+        hyper_age=hyper_age,
     )
     return new_state, TickInfo(
         ll=ll, proposed=should, drift=drift, drained=drained

@@ -24,7 +24,9 @@ import numpy as np
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig, RunConfig
 from repro.sched import Objective, Scheduler, SchedulerConfig, Telemetry
+from repro.hier.hyperprior import hyper_init
 from repro.serve import ring as serve_ring
+from repro.serve.gate import GateState, gate_init, gate_update
 from repro.serve.service import posterior_drift
 from repro.data.pipeline import DataIterator
 from repro.distributed.compression import make_compressor
@@ -142,6 +144,16 @@ class Trainer:
         self._ref_params = self.partitioner.unit_params()
         # Saturated staleness: the first drain always proposes.
         self._staleness = self.run.partitioner_max_staleness
+        # Self-calibrating gate baseline (used when the run leaves
+        # partitioner_drift_threshold unset) and the pooled fleet prior
+        # (refit every hyper_refit_every drains when hierarchical).  The
+        # age starts saturated so the first drain refits immediately.
+        self._gate = gate_init()
+        self._hyper = jax.tree_util.tree_map(
+            lambda x: jnp.asarray(x, jnp.float32),
+            hyper_init(self.partitioner.config.mu_guess),
+        )
+        self._hyper_age = self.partitioner.config.hyper_refit_every
 
     # ------------------------------------------------------------------ utils
     def _assign_microbatches(self, equal: bool = False) -> np.ndarray:
@@ -174,6 +186,9 @@ class Trainer:
                 "ring": self._ring,
                 "ref": self._ref_params,
                 "staleness": jnp.asarray(self._staleness, jnp.int32),
+                "gate": self._gate,
+                "hyper": self._hyper,
+                "hyper_age": jnp.asarray(self._hyper_age, jnp.int32),
             }
         return tree
 
@@ -226,6 +241,18 @@ class Trainer:
                         jnp.asarray, serve_tree["ref"]
                     )
                     self._staleness = int(serve_tree["staleness"])
+                    if "gate" in serve_tree:  # absent in pre-hier checkpoints
+                        self._gate = GateState(
+                            *jax.tree_util.tree_map(
+                                jnp.asarray, tuple(serve_tree["gate"])
+                            )
+                        )
+                    if "hyper" in serve_tree:
+                        self._hyper = jax.tree_util.tree_map(
+                            jnp.asarray, serve_tree["hyper"]
+                        )
+                    if "hyper_age" in serve_tree:
+                        self._hyper_age = int(serve_tree["hyper_age"])
                 self._assign_microbatches(equal=False)
         self.step = int(extra["step"])
         self.data.load_state_dict(extra["data_state"])
@@ -304,12 +331,35 @@ class Trainer:
                     )
                     # ... but re-solve the split only when the posterior
                     # actually moved (or the split got too stale) — the
-                    # repro.serve cadence policy (docs/serving.md).
+                    # repro.serve cadence policy (docs/serving.md).  With
+                    # hierarchical pooling the statistic is the max
+                    # per-worker surprise against the fleet hyperprior
+                    # (refit every hyper_refit_every drains); a run that
+                    # leaves partitioner_drift_threshold unset gets the
+                    # self-calibrating EWMA gate (docs/hierarchy.md).
                     cur = self.partitioner.unit_params()
-                    drift = float(posterior_drift(self._ref_params, cur))
+                    if self.partitioner.config.hierarchical:
+                        self._hyper_age += 1
+                        if (
+                            self._hyper_age
+                            >= self.partitioner.config.hyper_refit_every
+                        ):
+                            self._hyper = self.partitioner.fit_hyperprior()
+                            self._hyper_age = 0
+                        drift = float(
+                            np.max(self.partitioner.surprise(self._hyper))
+                        )
+                    else:
+                        drift = float(posterior_drift(self._ref_params, cur))
                     self._staleness += 1
+                    thr = run.partitioner_drift_threshold
+                    if thr is None:
+                        fired, self._gate = gate_update(self._gate, drift)
+                        moved = bool(fired)
+                    else:
+                        moved = drift > thr
                     if (
-                        drift > run.partitioner_drift_threshold
+                        moved
                         or self._staleness >= run.partitioner_max_staleness
                     ):
                         counts = self._assign_microbatches(equal=False)
