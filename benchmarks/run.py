@@ -20,6 +20,7 @@ import traceback
 
 from benchmarks import (
     bench_dag,
+    bench_fleet_scale,
     bench_frontier,
     bench_gibbs_convergence,
     bench_hier,
@@ -41,6 +42,7 @@ ALL = [
     ("train_step", bench_train_step.main),
     ("serve_loop", bench_serve.main),
     ("hier_pooling", bench_hier.main),
+    ("fleet_scale", bench_fleet_scale.main),
 ]
 
 SMOKE = [
@@ -51,6 +53,7 @@ SMOKE = [
     ("dag_stacked_engine", bench_dag.smoke_main),
     ("serve_loop", bench_serve.main),
     ("hier_pooling", bench_hier.main),
+    ("fleet_scale", bench_fleet_scale.smoke_main),
 ]
 
 

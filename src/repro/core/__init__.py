@@ -20,6 +20,17 @@ from .frontier import (
     serial_moments,
     sweep_two_way,
 )
+from .compress import (
+    CompressionReport,
+    beta_moments,
+    compression_report,
+    fit_lognormal_moments,
+    fit_surrogate,
+    grid_moments,
+    select_active,
+    surrogate_gap,
+    surrogate_moments,
+)
 from .gibbs import GibbsState, fit, fit_dag, fit_fleet, gibbs_batch, init_state
 from .moments import (
     BetaParams,
@@ -41,6 +52,7 @@ from .sharding import ShardingConfig, constrain_fleet, shard_fleet_map
 
 __all__ = [
     "BetaParams",
+    "CompressionReport",
     "GibbsState",
     "HeterogeneityAwarePartitioner",
     "NormalGammaParams",
@@ -48,7 +60,9 @@ __all__ = [
     "UnitParams",
     "WorkerTelemetry",
     "beta_logpdf",
+    "beta_moments",
     "completion_cdf",
+    "compression_report",
     "constrain_fleet",
     "dag_completion_moments",
     "exponent_grid",
@@ -56,7 +70,10 @@ __all__ = [
     "fit_beta_method_of_moments",
     "fit_dag",
     "fit_fleet",
+    "fit_lognormal_moments",
+    "fit_surrogate",
     "gamma_logpdf",
+    "grid_moments",
     "gibbs_batch",
     "init_state",
     "log_likelihood",
@@ -78,6 +95,9 @@ __all__ = [
     "sample_beta",
     "sample_gamma",
     "sample_normal",
+    "select_active",
+    "surrogate_gap",
+    "surrogate_moments",
     "sweep_two_way",
     "update_alpha_beta_params",
     "update_normal_gamma",

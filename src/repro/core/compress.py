@@ -1,0 +1,215 @@
+"""Compressed posterior representation + active-set refresh policy.
+
+The dense (K, 2, G) exponent log-posterior grid is the fleet estimator's
+memory and bandwidth ceiling (~400 MB at K=1e5, G=512, re-evaluated every
+drain).  This module breaks that wall for *converged* workers:
+
+  * The **surrogate** is the moment-matched Beta fit the sampler already
+    maintains — ``GibbsState.alpha_prior`` / ``beta_prior`` are the Eqs 12-18
+    method-of-moments compression of the last full grid evaluation.  Once a
+    worker has converged, sampling its exponents from the frozen Beta fit is
+    within grid-integration error of re-evaluating the grid (validated
+    against ``moments.log_posterior_grid`` by :func:`surrogate_gap`); the
+    conjugate Normal-Gamma block needs no grid at all.  For positive-scale
+    summaries (the completion-time scale ``mu``) the matching compression is
+    a log-normal fit, :func:`fit_lognormal_moments`.
+
+  * The **active set** keeps the full grid for the M workers that still need
+    it — young (low Normal-Gamma pseudo-counts), high ``hier.surprise``, or
+    high-anomaly workers, plus anyone whose surrogate has gone stale.
+    :func:`select_active` ranks the fleet by a priority built from exactly
+    those existing statistics and takes a fixed-size top-M, so downstream
+    shapes stay static and jit never retraces as membership churns.
+
+``gibbs_batch(..., active_idx=...)`` consumes the selection: the gathered
+M-worker slab runs the full fused grid path, everyone else runs the
+grid-free surrogate sweep, and the results scatter-merge back — bitwise the
+dense program when M = K.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .gibbs import GibbsState
+from .moments import (
+    BetaParams,
+    exponent_grid,
+    fit_beta_method_of_moments,
+    log_posterior_grid,
+    moments_from_log_density,
+)
+
+Array = jax.Array
+
+# float32 leaves of one worker's compressed GibbsState: ng(mu0, kappa0, nu0,
+# psi0) + alpha_prior(a, b) + beta_prior(a, b) + samples(mu, lam, alpha,
+# beta).  The uint32 PRNG key pair adds the same 8 bytes to both
+# representations and is excluded from the comparison.
+COMPRESSED_LEAVES = 12
+
+
+def beta_moments(p: BetaParams) -> Tuple[Array, Array]:
+    """Analytic (E, Var) of Beta(a, b) — the surrogate's closed-form moments."""
+    s = p.a + p.b
+    mean = p.a / s
+    var = p.a * p.b / (s * s * (s + 1.0))
+    return mean, var
+
+
+def fit_lognormal_moments(mean: Array, var: Array) -> Tuple[Array, Array]:
+    """Log-normal (m, s2) matching (E, Var) — the positive-scale surrogate.
+
+    Returns the log-space location and variance such that
+    ``LogNormal(m, s2)`` has the given mean and variance.  Used to compress
+    positive-scale posteriors (completion-time scale) where a Beta fit does
+    not apply.
+    """
+    mean = jnp.maximum(mean, 1e-12)
+    s2 = jnp.log1p(jnp.maximum(var, 0.0) / (mean * mean))
+    m = jnp.log(mean) - 0.5 * s2
+    return m, s2
+
+
+def surrogate_moments(state: GibbsState) -> Tuple[Array, Array]:
+    """(E, Var) of the compressed exponent posteriors, shape (..., 2).
+
+    Index 0 is the alpha posterior, index 1 the beta posterior — matching the
+    layout of ``moments.log_posterior_grid``.
+    """
+    ea, va = beta_moments(state.alpha_prior)
+    eb, vb = beta_moments(state.beta_prior)
+    return jnp.stack([ea, eb], axis=-1), jnp.stack([va, vb], axis=-1)
+
+
+def grid_moments(
+    state: GibbsState,
+    t: Array,
+    f: Array,
+    mask: Optional[Array] = None,
+    *,
+    grid_size: int = 512,
+) -> Tuple[Array, Array]:
+    """(E, Var) of the dense exponent grid posterior, shape (..., 2).
+
+    Evaluates ``moments.log_posterior_grid`` at the state's current
+    conditioning samples — exactly the grid the next ``_advance`` sweep
+    would moment-fit — and integrates it.  The reference the surrogate is
+    validated against.
+    """
+    grid = exponent_grid(grid_size)
+    logp = log_posterior_grid(
+        grid, t, f, state.mu, state.lam, state.alpha, state.beta,
+        state.alpha_prior, state.beta_prior, mask, symmetric_grid=True,
+    )
+    return moments_from_log_density(grid, logp)
+
+
+def fit_surrogate(
+    state: GibbsState,
+    t: Array,
+    f: Array,
+    mask: Optional[Array] = None,
+    *,
+    grid_size: int = 512,
+) -> Tuple[BetaParams, BetaParams]:
+    """Moment-match fresh Beta surrogates to the dense grid posterior.
+
+    This is what a full active-set refresh chains into ``alpha_prior`` /
+    ``beta_prior`` (identical to the fit inside ``gibbs._advance``); exposed
+    for validation and for compressing externally-fitted states.
+    """
+    mean, var = grid_moments(state, t, f, mask, grid_size=grid_size)
+    a = fit_beta_method_of_moments(mean[..., 0], var[..., 0])
+    b = fit_beta_method_of_moments(mean[..., 1], var[..., 1])
+    return a, b
+
+
+def surrogate_gap(
+    state: GibbsState,
+    t: Array,
+    f: Array,
+    mask: Optional[Array] = None,
+    *,
+    grid_size: int = 512,
+) -> Tuple[Array, Array]:
+    """|moment error| of the surrogate vs the dense grid, shape (..., 2).
+
+    Returns (|E_grid - E_surrogate|, |Var_grid - Var_surrogate|) per exponent.
+    For a converged worker (evidence dominated by the chained prior) the mean
+    gap is < 1e-3 — the acceptance bound for trusting the compressed path.
+    """
+    ge, gv = grid_moments(state, t, f, mask, grid_size=grid_size)
+    se, sv = surrogate_moments(state)
+    return jnp.abs(ge - se), jnp.abs(gv - sv)
+
+
+def select_active(
+    m: int,
+    *,
+    age: Array,
+    nu: Optional[Array] = None,
+    surprise: Optional[Array] = None,
+    anomaly: Optional[Array] = None,
+    live: Optional[Array] = None,
+    youth_weight: float = 32.0,
+    surprise_weight: float = 8.0,
+    anomaly_weight: float = 4.0,
+    youth_scale: float = 16.0,
+) -> Tuple[Array, Array]:
+    """Pick the fixed-size top-M active set; returns (idx (M,), priority (K,)).
+
+    Priority is a sum of the existing fleet-health statistics — no new
+    signals are estimated:
+
+      * ``age``: drains since the worker's last full grid refresh.  Baseline
+        term; guarantees every live worker is eventually refreshed
+        (round-robin under ties, since ``top_k`` breaks ties by index).
+      * ``nu``: Normal-Gamma ``nu0`` pseudo-counts.  Young workers (low
+        effective sample size ``2(nu-1)``) score up to ``youth_weight``.
+      * ``surprise``: ``hier.surprise`` drift statistic (clipped at 0).
+      * ``anomaly``: any higher-is-worse anomaly score, e.g. the EWMA
+        log-likelihood deficit from ``sched.anomaly``.
+      * ``live``: dead capacity slots drop to -inf and are only selected
+        when fewer than M live workers exist.
+
+    M is static so the returned index is a fixed shape — selection feeds
+    ``gibbs_batch(active_idx=...)`` without retracing.
+    """
+    pri = age.astype(jnp.float32)
+    if nu is not None:
+        ess = jnp.maximum(2.0 * (nu - 1.0), 0.0)  # hier.effective_sample_size
+        pri = pri + youth_weight * youth_scale / (youth_scale + ess)
+    if surprise is not None:
+        pri = pri + surprise_weight * jnp.maximum(surprise, 0.0)
+    if anomaly is not None:
+        pri = pri + anomaly_weight * jnp.maximum(anomaly, 0.0)
+    if live is not None:
+        pri = jnp.where(live > 0, pri, -jnp.inf)
+    _, idx = jax.lax.top_k(pri, m)
+    return idx, pri
+
+
+class CompressionReport(NamedTuple):
+    """Posterior-state footprint of dense vs compressed configurations."""
+
+    dense_bytes: int
+    compressed_bytes: int
+    ratio: float
+
+
+def compression_report(
+    k: int, grid_size: int, active: int, *, dtype_bytes: int = 4
+) -> CompressionReport:
+    """Posterior-state bytes: dense (K, 2, G) grid vs active-set compressed.
+
+    Dense keeps the full exponent grid for all K workers; compressed keeps
+    the grid only for the M-worker active slab plus the per-worker scalar
+    surrogate (COMPRESSED_LEAVES floats) that every configuration carries.
+    """
+    scalars = k * COMPRESSED_LEAVES * dtype_bytes
+    dense = k * 2 * grid_size * dtype_bytes + scalars
+    compressed = min(active, k) * 2 * grid_size * dtype_bytes + scalars
+    return CompressionReport(dense, compressed, dense / max(compressed, 1))

@@ -162,6 +162,95 @@ def _advance(
     return state, ll
 
 
+def _advance_surrogate(
+    state: GibbsState,
+    t: Array,
+    f: Array,
+    mask: Optional[Array],
+    *,
+    n_iters: int,
+    chain_priors: bool,
+) -> Tuple[GibbsState, Array]:
+    """Grid-free Gibbs sweeps against the compressed exponent posterior.
+
+    The stored Beta hyperparameters ARE the moment-matched surrogate of the
+    exponent posterior (``core.compress``): instead of re-evaluating the
+    (2, G) log-posterior grid, each sweep samples (alpha, beta) directly from
+    the frozen Beta fit and runs only the conjugate Normal-Gamma block.  The
+    Beta priors are never re-chained — they stay frozen until the worker next
+    enters the active set and earns a full grid refresh.
+
+    PRNG discipline matches ``_advance`` split-for-split, so a worker keeps a
+    coherent key stream while it alternates between the two paths.
+    """
+
+    def sweep(carry, _):
+        st = carry
+        key, k_l, k_m, k_a, k_b = _split5(st.key)
+
+        ng_post = update_normal_gamma(st.ng, t, f, st.alpha, st.beta, mask)
+        lam = _sample(sample_gamma, k_l, ng_post.nu0, ng_post.psi0)
+        mu = _sample(
+            sample_normal, k_m, ng_post.mu0,
+            1.0 / jnp.sqrt(jnp.maximum(ng_post.kappa0 * lam, 1e-30)),
+        )
+
+        alpha = _sample(sample_beta, k_a, st.alpha_prior.a, st.alpha_prior.b)
+        beta = _sample(sample_beta, k_b, st.beta_prior.a, st.beta_prior.b)
+
+        new_st = GibbsState(st.ng, st.alpha_prior, st.beta_prior, mu, lam, alpha, beta, key)
+        return new_st, ng_post
+
+    state, ng_hist = jax.lax.scan(sweep, state, None, length=n_iters)
+    ng_post = jax.tree_util.tree_map(lambda x: x[-1], ng_hist)
+
+    if chain_priors:
+        # Only the conjugate block chains; the Beta surrogate stays frozen.
+        state = state._replace(ng=ng_post)
+
+    ll = log_likelihood(t, f, state.mu, state.lam, state.alpha, state.beta, mask)
+    return state, ll
+
+
+def _advance_active(
+    state: GibbsState,
+    t: Array,
+    f: Array,
+    mask: Optional[Array],
+    active_idx: Array,
+    *,
+    n_iters: int,
+    grid_size: int,
+    use_pallas: bool,
+    chain_priors: bool,
+) -> Tuple[GibbsState, Array]:
+    """Active-set advance: full grid for the gathered M-worker slab, the
+    compressed surrogate for everyone else, scatter-merged back to (K,).
+
+    Because ``_advance`` is strictly per-worker (no op mixes fleet rows), the
+    gathered slab computes exactly what the same rows would compute inside a
+    dense launch — with ``active_idx = arange(K)`` the result is bitwise the
+    dense path.
+    """
+    m = jnp.ones_like(t) if mask is None else jnp.broadcast_to(mask, t.shape)
+
+    take = lambda x: x[active_idx]
+    slab = jax.tree_util.tree_map(take, state)
+    slab, ll_slab = _advance(
+        slab, take(t), take(f), take(m),
+        n_iters=n_iters, grid_size=grid_size, use_pallas=use_pallas,
+        chain_priors=chain_priors,
+    )
+
+    rest, ll_rest = _advance_surrogate(
+        state, t, f, m, n_iters=n_iters, chain_priors=chain_priors
+    )
+
+    put = lambda full, part: full.at[active_idx].set(part)
+    merged = jax.tree_util.tree_map(put, rest, slab)
+    return merged, put(ll_rest, ll_slab)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -179,6 +268,7 @@ def gibbs_batch(
     use_pallas: bool = False,
     chain_priors: bool = True,
     sharding: Optional[ShardingConfig] = None,
+    active_idx: Optional[Array] = None,
 ) -> Tuple[GibbsState, Array]:
     """Process one telemetry batch; returns (new_state, log_likelihood).
 
@@ -204,6 +294,12 @@ def gibbs_batch(
       chain_priors: if True (paper's Algorithm 1), the batch posterior becomes
         the next batch's prior.
       sharding: optional fleet-axis device sharding; None = single device.
+      active_idx: optional (M,) int array of fleet rows to advance through the
+        full grid path; the remaining K-M workers advance through the grid-free
+        compressed surrogate (``core.compress``).  M is static (fixed-size
+        active set), values are traced.  Bitwise-equal to the dense path when
+        ``active_idx = arange(K)``.  Single-device only (the slab gather is a
+        cross-shard op); combine with ``sharding=None``.
     """
     kw = dict(
         n_iters=n_iters,
@@ -211,6 +307,12 @@ def gibbs_batch(
         use_pallas=use_pallas,
         chain_priors=chain_priors,
     )
+    if active_idx is not None and t.ndim >= 2:
+        if sharding is not None:
+            raise ValueError(
+                "active_idx is a single-device path; pass sharding=None"
+            )
+        return _advance_active(state, t, f, mask, active_idx, **kw)
     if sharding is None or t.ndim < 2:
         return _advance(state, t, f, mask, **kw)
 

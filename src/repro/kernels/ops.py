@@ -45,11 +45,22 @@ def posterior_grid_fleet(
     mask: Optional[Array] = None,
     *,
     sharding=None,
+    active_idx: Optional[Array] = None,
+    out_prev: Optional[Array] = None,
 ) -> Array:
     """Both exponent posteriors for a whole fleet in one kernel launch.
 
     Signature mirrors ``repro.core.moments.log_posterior_grid``: t/f/mask
     (K, N), per-worker scalars (K,) -> (K, 2, G).
+
+    ``active_idx`` (an (M,) int array, M static) launches the kernel over the
+    gathered M-worker slab only: inputs are gathered, the fused kernel runs
+    on (M, N) rows, and the (M, 2, G) result is scattered back into
+    ``out_prev`` (a persistent (K, 2, G) grid cache; zeros when omitted) via
+    ``lax.scatter``.  With ``active_idx = arange(K)`` the output rows are
+    bitwise the dense launch — per-worker math never mixes fleet rows.
+    Single-device only (the gather is a cross-shard op); combine with
+    ``sharding=None``.
 
     Stacked leading axes are folded into the fleet axis before the launch:
     a workflow DAG's (S, K, N) telemetry block (per-stage scalars (S, K))
@@ -68,6 +79,27 @@ def posterior_grid_fleet(
     """
     if mask is None:
         mask = jnp.ones_like(t)
+    if active_idx is not None and t.ndim == 2:
+        if sharding is not None:
+            raise ValueError(
+                "active_idx is a single-device path; pass sharding=None"
+            )
+        take_kn = lambda x: x[active_idx]
+        take_k = lambda x: jnp.broadcast_to(
+            jnp.asarray(x, jnp.float32), t.shape[:1]
+        )[active_idx]
+        slab = posterior_grid_fleet(
+            grid, take_kn(t), take_kn(f),
+            take_k(mu), take_k(lam), take_k(alpha), take_k(beta),
+            type(alpha_prior)(take_k(alpha_prior.a), take_k(alpha_prior.b)),
+            type(beta_prior)(take_k(beta_prior.a), take_k(beta_prior.b)),
+            take_kn(mask),
+        )
+        base = (
+            jnp.zeros((t.shape[0],) + slab.shape[1:], slab.dtype)
+            if out_prev is None else out_prev
+        )
+        return base.at[active_idx].set(slab)
     lead = t.shape[:-1]
     if t.ndim > 2:
         n = t.shape[-1]

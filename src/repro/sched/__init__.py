@@ -74,13 +74,18 @@ from .scheduler import (
     SchedulerState,
     Telemetry,
     add_workers,
+    admit_workers,
+    advance_fleet,
     anomaly,
+    capacity,
     flag_stragglers,
+    grow_capacity,
     init,
     num_workers,
     observe,
     propose,
     remove_workers,
+    retire_workers,
     solve_fractions,
     unit_params,
     unit_params_from_gibbs,
@@ -98,9 +103,13 @@ __all__ = [
     "Telemetry",
     "WorkflowDAG",
     "add_workers",
+    "admit_workers",
+    "advance_fleet",
     "anomaly",
+    "capacity",
     "dag_stats",
     "flag_stragglers",
+    "grow_capacity",
     "init",
     "init_dag",
     "num_workers",
@@ -111,6 +120,7 @@ __all__ = [
     "propose_dag",
     "quantize_fractions",
     "remove_workers",
+    "retire_workers",
     "solve_fractions",
     "stage_params",
     "uniform_fractions",

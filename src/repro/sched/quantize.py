@@ -2,11 +2,14 @@
 
 SPMD reality: simplex fractions are realized as integer microbatch counts
 (static shapes, no recompilation).  Largest-remainder rounding runs on the
-host (O(K) integers), then the greedy donor->receiver refinement — formerly a
-Python double loop issuing one device program per candidate move — evaluates
-every (donor, receiver) move of a step in one batched objective sweep inside
-a single jitted ``lax.while_loop``, so a fleet of hundreds of workers
-quantizes in one device program.
+host — vectorized water-fill shed/top-up, O(K log K) at K=10^5 where the
+legacy one-unit-per-argsort loop was O(K^2 log K) — then the greedy
+donor->receiver refinement evaluates candidate moves in one batched
+objective sweep inside a single jitted ``lax.while_loop``.  Beyond
+``_REFINE_SLAB`` workers the sweep restricts donors and receivers to the
+top-M slab ranked by the smooth objective gradient, so each move costs
+O(M^2) evaluations instead of the O(K^2) that made refinement the K=10^4+
+bottleneck; fleets at or under the slab keep the exact exhaustive sweep.
 """
 from __future__ import annotations
 
@@ -25,12 +28,50 @@ Array = jax.Array
 
 # Coarser quadrature than the continuous solver: the lattice steps are
 # O(1/total) so fine integration noise is irrelevant, and the refinement
-# evaluates K^2 candidates per move.
+# evaluates many candidates per move.
 _REFINE_QUAD_POINTS = 192
+
+# Fleets larger than this use gradient-ranked donor/receiver slabs; at or
+# under it the move sweep stays exhaustive (and bitwise-legacy).
+_REFINE_SLAB = 32
+
+
+def _water_fill(priority: np.ndarray, cap: np.ndarray, need: int) -> np.ndarray:
+    """Integer units per worker reproducing descending-priority greedy taking.
+
+    The legacy shed/top-up loops take one unit at a time from the current
+    argmax of ``priority_i - taken_i`` (bounded by ``cap_i``) until ``need``
+    units are taken — O(K log K) *per unit*.  The closed form is a water
+    level tau with ``taken_i = clip(ceil(priority_i - tau), 0, cap_i)``;
+    bisecting tau costs O(K) per iteration for a fixed ~80 iterations, then
+    boundary ties (units exactly at the water line, at most one per worker)
+    are trimmed lowest-priority-first with a single stable argsort.
+    """
+    cap = np.asarray(cap, np.int64)
+    taken = np.zeros_like(cap)
+    if need <= 0:
+        return taken
+    priority = np.asarray(priority, np.float64)
+    lo = float(priority.min() - cap.max() - 2.0)  # taken = cap everywhere
+    hi = float(priority.max() + 1.0)  # taken = 0 everywhere
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if np.clip(np.ceil(priority - mid), 0, cap).sum() >= need:
+            lo = mid
+        else:
+            hi = mid
+    taken = np.clip(np.ceil(priority - lo), 0, cap).astype(np.int64)
+    surplus = int(taken.sum()) - need
+    if surplus > 0:
+        last_unit = np.where(taken > 0, priority - taken + 1.0, np.inf)
+        order = np.argsort(last_unit, kind="stable")
+        taken[order[:surplus]] -= 1
+    return taken
 
 
 @functools.partial(
-    jax.jit, static_argnames=("objective", "min_per_worker", "max_moves")
+    jax.jit,
+    static_argnames=("objective", "min_per_worker", "max_moves", "slab"),
 )
 def _refine_counts(
     counts: Array,
@@ -40,15 +81,20 @@ def _refine_counts(
     objective: Objective,
     min_per_worker: int,
     max_moves: int,
+    slab: int = _REFINE_SLAB,
 ) -> Array:
     """Greedy best-move descent on the count lattice, fully on device.
 
-    Each iteration scores all K*K single-microbatch donor->receiver moves
-    (donors swept by ``lax.map`` to bound memory, receivers vmapped) and
-    applies the best strictly-improving one; stops when none improves.
+    Each iteration scores single-microbatch donor->receiver moves and applies
+    the best strictly-improving one; stops when none improves.  At K <= slab
+    all K*K moves are scored (donors swept by ``lax.map`` to bound memory,
+    receivers vmapped) — the exact legacy sweep.  Larger fleets rank workers
+    by the smooth objective gradient wrt fractions (high gradient = the move
+    away helps most -> donor; low = receiver) and score only the slab x slab
+    block; acceptance still uses the true quantized objective, so a move is
+    never applied on gradient evidence alone.
     """
     k = counts.shape[0]
-    eye = jnp.eye(k, dtype=counts.dtype)
     inv_total = 1.0 / total.astype(jnp.float32)
     ids = jnp.arange(k)
 
@@ -60,16 +106,56 @@ def _refine_counts(
             num_points=_REFINE_QUAD_POINTS,
         )
 
-    def best_move(c):
-        def donor_row(d):
-            cand = c[None, :] - eye[d][None, :] + eye  # (K, K) receiver moves
-            s = jax.vmap(score)(cand)
-            valid = (c[d] > min_per_worker) & (ids != d)
-            return jnp.where(valid, s, jnp.inf)
+    if k <= slab:
+        eye = jnp.eye(k, dtype=counts.dtype)
 
-        all_scores = jax.lax.map(donor_row, ids)  # (K donors, K receivers)
-        flat = jnp.argmin(all_scores)
-        return flat // k, flat % k, all_scores.reshape(-1)[flat]
+        def best_move(c):
+            def donor_row(d):
+                cand = c[None, :] - eye[d][None, :] + eye  # (K, K) moves
+                s = jax.vmap(score)(cand)
+                valid = (c[d] > min_per_worker) & (ids != d)
+                return jnp.where(valid, s, jnp.inf)
+
+            all_scores = jax.lax.map(donor_row, ids)  # (K donors, K receivers)
+            flat = jnp.argmin(all_scores)
+            return flat // k, flat % k, all_scores.reshape(-1)[flat]
+
+        def apply_move(c, d, r):
+            return c - eye[d] + eye[r]
+
+    else:
+        grad_smooth = jax.grad(
+            lambda fr: evaluate(
+                objective, fr, params,
+                num_points=_REFINE_QUAD_POINTS, smooth=True,
+            )
+        )
+        hot = lambda i: (ids == i).astype(counts.dtype)
+
+        def best_move(c):
+            g = grad_smooth(c.astype(jnp.float32) * inv_total)
+            _, d_idx = jax.lax.top_k(
+                jnp.where(c > min_per_worker, g, -jnp.inf), slab
+            )
+            _, r_idx = jax.lax.top_k(-g, slab)
+            recv = jax.vmap(hot)(r_idx)  # (slab, K)
+
+            def donor_row(d):
+                cand = c[None, :] - hot(d)[None, :] + recv
+                s = jax.vmap(score)(cand)
+                valid = (c[d] > min_per_worker) & (r_idx != d)
+                return jnp.where(valid, s, jnp.inf)
+
+            all_scores = jax.lax.map(donor_row, d_idx)  # (slab, slab)
+            flat = jnp.argmin(all_scores)
+            return (
+                d_idx[flat // slab],
+                r_idx[flat % slab],
+                all_scores.reshape(-1)[flat],
+            )
+
+        def apply_move(c, d, r):
+            return c - hot(d) + hot(r)
 
     def cond(carry):
         _, _, moves, done = carry
@@ -79,7 +165,7 @@ def _refine_counts(
         c, best, moves, _ = carry
         d, r, val = best_move(c)
         improved = val < best - 1e-9
-        c = jnp.where(improved, c - eye[d] + eye[r], c)
+        c = jnp.where(improved, apply_move(c, d, r), c)
         return c, jnp.minimum(val, best), moves + 1, ~improved
 
     carry = (counts, score(counts), jnp.zeros((), jnp.int32), jnp.asarray(False))
@@ -95,14 +181,40 @@ def quantize_fractions(
     objective: Objective = Objective(),
     min_per_worker: int = 1,
     refine_passes: int = 4,
+    live: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Round simplex fractions to integer microbatch counts summing to total.
 
-    Largest-remainder rounding; when ``params`` is given, batched greedy
+    Largest-remainder rounding (vectorized water-fill shed/top-up — see
+    ``_water_fill``); when ``params`` is given, batched greedy
     single-microbatch moves accepted only if they reduce the true (quantized)
     objective.  Invariants: counts.sum() == total_microbatches and every
     count >= min_per_worker, for any fraction vector.
+
+    ``live`` (a (K,) boolean mask from a capacity-slot ``SchedulerState``)
+    restricts quantization to live workers: dead slots get exactly zero
+    microbatches, are exempt from the ``min_per_worker`` floor, and never
+    enter the refinement sweep.
     """
+    if live is not None:
+        live = np.asarray(live, bool)
+        alive = np.flatnonzero(live)
+        sub = np.asarray(fracs, np.float64)[alive]
+        sub_params = params
+        if params is not None:
+            gather = lambda x: jnp.asarray(np.asarray(x)[alive])
+            sub_params = jax.tree_util.tree_map(gather, params)
+        counts = np.zeros(len(live), np.int64)
+        counts[alive] = quantize_fractions(
+            sub / max(sub.sum(), 1e-30),
+            total_microbatches,
+            sub_params,
+            objective=objective,
+            min_per_worker=min_per_worker,
+            refine_passes=refine_passes,
+        )
+        return counts
+
     k = len(fracs)
     if total_microbatches < k * min_per_worker:
         raise ValueError(
@@ -111,19 +223,17 @@ def quantize_fractions(
         )
     raw = np.asarray(fracs, np.float64) * total_microbatches
     counts = np.maximum(np.floor(raw).astype(np.int64), min_per_worker)
-    while counts.sum() > total_microbatches:
-        # Shed from the most over-allocated worker that can still give
-        # (sum > total >= k*min implies one exists, so this terminates).
-        order = np.argsort(-(counts - raw))
-        for idx in order:
-            if counts[idx] > min_per_worker:
-                counts[idx] -= 1
-                break
-    rema = raw - counts
-    while counts.sum() < total_microbatches:
-        idx = int(np.argmax(rema))
-        counts[idx] += 1
-        rema[idx] -= 1.0
+    # Shed from the most over-allocated workers that can still give
+    # (sum > total >= k*min implies headroom exists).
+    counts -= _water_fill(
+        counts - raw,
+        counts - min_per_worker,
+        int(counts.sum()) - total_microbatches,
+    )
+    # Top up by largest remainder (each extra unit lowers the remainder by 1,
+    # which is exactly the water-fill greedy).
+    need = total_microbatches - int(counts.sum())
+    counts += _water_fill(raw - counts, np.full(k, max(need, 0)), need)
 
     if params is None:
         return counts
@@ -134,6 +244,6 @@ def quantize_fractions(
         jnp.asarray(total_microbatches),
         objective=objective,
         min_per_worker=min_per_worker,
-        max_moves=refine_passes * k,
+        max_moves=refine_passes * min(k, 4 * _REFINE_SLAB),
     )
     return np.asarray(refined, np.int64)

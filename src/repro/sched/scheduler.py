@@ -64,6 +64,12 @@ class SchedulerState(NamedTuple):
     ewma_count: Array  # (K,) anomaly updates folded into each worker's EWMA
     step: Array  # scalar, observe() calls so far
     key: Array  # scheduler-level PRNG key
+    live: Optional[Array] = None  # (K,) float {0, 1} capacity-slot mask; None
+    # = every slot live (bitwise-legacy).  Allocated by ``init(capacity=...)``
+    # and flipped in place by the jit-native ``admit_workers`` /
+    # ``retire_workers`` slot transitions — fleet membership then changes
+    # with no K-sized host hop and no leaf reshapes (so jit never retraces
+    # until capacity itself grows via ``grow_capacity``).
 
 
 class ProposeStats(NamedTuple):
@@ -110,11 +116,31 @@ class SchedulerConfig:
 # --------------------------------------------------------------------------
 # transitions
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("config", "num_workers"))
-def init(config: SchedulerConfig, num_workers: int, key: Array) -> SchedulerState:
-    """Fresh beliefs for a K-worker fleet."""
+@functools.partial(jax.jit, static_argnames=("config", "num_workers", "capacity"))
+def init(
+    config: SchedulerConfig,
+    num_workers: int,
+    key: Array,
+    capacity: Optional[int] = None,
+) -> SchedulerState:
+    """Fresh beliefs for a K-worker fleet.
+
+    ``capacity`` allocates that many worker slots up front (must be >=
+    ``num_workers``): leaves are sized (capacity, ...), the first
+    ``num_workers`` slots are live, and membership changes run through the
+    jit-native ``admit_workers`` / ``retire_workers`` transitions without
+    reshaping a single leaf.  ``capacity=None`` is the legacy exact-size
+    state with no live mask.
+    """
+    if capacity is None:
+        slots, live = num_workers, None
+    else:
+        if capacity < num_workers:
+            raise ValueError(f"{capacity=} < {num_workers=}")
+        slots = capacity
+        live = (jnp.arange(capacity) < num_workers).astype(jnp.float32)
     key, sub = jax.random.split(key)
-    keys = jax.random.split(sub, num_workers)
+    keys = jax.random.split(sub, slots)
     fleet = jax.vmap(
         lambda k: gibbs.init_state(k, mu_guess=config.mu_guess)
     )(keys)
@@ -124,13 +150,14 @@ def init(config: SchedulerConfig, num_workers: int, key: Array) -> SchedulerStat
         # checkpointing (np.asarray gathers) works unchanged.
         gibbs=constrain_fleet(fleet, config.mesh),
         ewma_ll=constrain_fleet(
-            jnp.zeros((num_workers,), jnp.float32), config.mesh
+            jnp.zeros((slots,), jnp.float32), config.mesh
         ),
         ewma_count=constrain_fleet(
-            jnp.zeros((num_workers,), jnp.int32), config.mesh
+            jnp.zeros((slots,), jnp.int32), config.mesh
         ),
         step=jnp.zeros((), jnp.int32),
         key=key,
+        live=constrain_fleet(live, config.mesh) if live is not None else None,
     )
 
 
@@ -140,6 +167,7 @@ def advance_fleet(
     fracs: Array,
     config: SchedulerConfig,
     mask: Optional[Array] = None,
+    active_idx: Optional[Array] = None,
 ) -> Tuple[gibbs.GibbsState, Array]:
     """The one fleet-advance path: discount -> fleet-native ``gibbs_batch``.
 
@@ -150,22 +178,41 @@ def advance_fleet(
     to the backend default; threads ``config.mesh`` so a sharded scheduler
     advances each worker's chain on the device that owns it
     (``gibbs_batch``'s ``shard_map`` path).
+
+    ``active_idx`` routes the advance through the compressed active-set path
+    (``core.compress``): the (M,) selected rows get the full grid program,
+    everyone else the grid-free surrogate sweep.  Power-prior forgetting of
+    the exponent Beta priors pairs with the grid re-fit that re-tightens
+    them, so surrogate workers skip BOTH — their frozen Beta fit neither
+    widens nor re-learns until they re-enter the active set.  The conjugate
+    Normal-Gamma block discounts for every worker as usual.
     """
     use_pallas = config.use_pallas
     if use_pallas is None:
         from repro.kernels.ops import use_pallas_default
 
         use_pallas = use_pallas_default()
-    fleet = gibbs.discount_state(fleet, config.discount)
+    discounted = gibbs.discount_state(fleet, config.discount)
+    if active_idx is not None and times.ndim >= 2:
+        onehot = (
+            jnp.zeros(times.shape[:1], jnp.float32).at[active_idx].set(1.0)
+        )
+        freeze = lambda orig, disc: jnp.where(onehot > 0, disc, orig)
+        pick = lambda o, d: type(o)(freeze(o.a, d.a), freeze(o.b, d.b))
+        discounted = discounted._replace(
+            alpha_prior=pick(fleet.alpha_prior, discounted.alpha_prior),
+            beta_prior=pick(fleet.beta_prior, discounted.beta_prior),
+        )
     return gibbs.gibbs_batch(
-        fleet,
+        discounted,
         times,
         fracs,
         mask,
         n_iters=config.n_iters,
         grid_size=config.grid_size,
         use_pallas=use_pallas,
-        sharding=config.mesh,
+        sharding=None if active_idx is not None else config.mesh,
+        active_idx=active_idx,
     )
 
 
@@ -189,7 +236,14 @@ def observe(
     ``mask`` optionally invalidates telemetry elements (same shape as
     ``telemetry.times``): masked slots — a ring drain's padded tail, a
     failed worker's garbage times — are exact no-ops on every posterior.
+
+    On a capacity-slot state (``state.live`` is not None) dead slots are
+    masked out automatically: whatever telemetry their rows carry is an
+    exact no-op on their parked posteriors.
     """
+    if state.live is not None:
+        lv = state.live[:, None]
+        mask = lv if mask is None else jnp.broadcast_to(mask, telemetry.times.shape) * lv
     fleet, ll = advance_fleet(
         state.gibbs, telemetry.times, telemetry.fracs, config, mask=mask
     )
@@ -230,24 +284,30 @@ def unit_params(state: SchedulerState, *, use_samples: bool = False) -> UnitPara
     return unit_params_from_gibbs(state.gibbs, use_samples=use_samples)
 
 
-def _equalizing_fractions(params: UnitParams) -> Array:
+def _equalizing_fractions(
+    params: UnitParams, live: Optional[Array] = None
+) -> Array:
     """Makespan-equalizing split: find tau with sum_k (tau/mu_k)^(1/alpha_k) = 1.
 
     Solved by bisection in log-space (the sum is monotone in tau); exact for
     zero variance, and a robust interior starting point otherwise.  Unlike the
     legacy ``f ∝ 1/mu`` heuristic this respects the scaling exponents, so
     sub-linear alpha estimates no longer mislead the optimizer.
+
+    ``live`` (a (K,) {0, 1} mask) excludes dead capacity slots: they get
+    exactly zero and never enter the bisection sum.
     """
     mu = jnp.maximum(params.mu, 1e-6)
     alpha = jnp.clip(params.alpha, 0.05, 1.0)
     log_mu = jnp.log(mu)
+    lv = jnp.ones_like(mu) if live is None else live.astype(mu.dtype)
 
     def frac_sum(log_tau):
         log_f = jnp.clip((log_tau - log_mu) / alpha, -60.0, 0.0)
-        return jnp.sum(jnp.exp(log_f))
+        return jnp.sum(lv * jnp.exp(log_f))
 
-    # At tau = max(mu): f_k >= 1 for the slowest unit -> sum >= 1.
-    hi0 = jnp.max(log_mu)
+    # At tau = max over live mu: f_k >= 1 for the slowest live unit -> sum >= 1.
+    hi0 = jnp.max(jnp.where(lv > 0, log_mu, -jnp.inf))
     lo0 = hi0 - 60.0
 
     def bisect(carry, _):
@@ -258,8 +318,8 @@ def _equalizing_fractions(params: UnitParams) -> Array:
 
     (lo, hi), _ = jax.lax.scan(bisect, (lo0, hi0), None, length=50)
     log_tau = 0.5 * (lo + hi)
-    f = jnp.exp(jnp.clip((log_tau - log_mu) / alpha, -60.0, 0.0))
-    return f / jnp.sum(f)
+    f = lv * jnp.exp(jnp.clip((log_tau - log_mu) / alpha, -60.0, 0.0))
+    return f / jnp.maximum(jnp.sum(f), 1e-30)
 
 
 @functools.partial(
@@ -276,8 +336,15 @@ def solve_fractions(
     risk_aversion=None,
     var_budget=None,
     deadline=None,
+    live: Optional[Array] = None,
 ) -> Tuple[Array, ProposeStats]:
     """Objective-optimal fractions on the K-simplex (see module docstring).
+
+    ``live`` (a (K,) {0, 1} capacity-slot mask) restricts the solve to live
+    workers: dead slots get exactly zero fraction (their logits are pinned at
+    -inf through the softmax and the ``min_fraction`` floor skips them), and
+    neither the equalizing init nor the objective ever consults their parked
+    posteriors.
 
     Proposals are floored at ``min_fraction`` per worker: SPMD quantization
     gives every live worker at least one microbatch anyway, and telemetry at
@@ -295,11 +362,27 @@ def solve_fractions(
     overrides = dict(
         risk_aversion=risk_aversion, var_budget=var_budget, deadline=deadline
     )
-    f_eq = _equalizing_fractions(params)
+    if live is not None:
+        # Park dead slots on benign interior parameters so their (ignored)
+        # rows cannot poison the quadrature with extreme magnitudes.
+        lv = live > 0
+        params = UnitParams(
+            mu=jnp.where(lv, params.mu, 1.0),
+            sigma=jnp.where(lv, params.sigma, 1e-3),
+            alpha=jnp.where(lv, params.alpha, 0.5),
+            beta=jnp.where(lv, params.beta, 0.5),
+        )
+    f_eq = _equalizing_fractions(params, live)
     k = f_eq.shape[0]
-    f_uni = jnp.full((k,), 1.0 / k, f_eq.dtype)
+    if live is None:
+        f_uni = jnp.full((k,), 1.0 / k, f_eq.dtype)
+    else:
+        n_live = jnp.maximum(jnp.sum(live), 1.0)
+        f_uni = live.astype(f_eq.dtype) / n_live
 
     def smooth_loss(logits):
+        if live is not None:
+            logits = jnp.where(live > 0, logits, -1e9)
         fracs = jax.nn.softmax(logits)
         return evaluate(
             objective, fracs, params, num_points=num_points, smooth=True,
@@ -322,11 +405,16 @@ def solve_fractions(
 
     init_carry = (logits0, jnp.zeros((k,)), jnp.zeros((k,)), jnp.asarray(0.0))
     (logits, _, _, _), _ = jax.lax.scan(adam_step, init_carry, None, length=steps)
+    if live is not None:
+        logits = jnp.where(live > 0, logits, -1e9)
     f_ref = jax.nn.softmax(logits)
 
     # Safeguard: descent may only improve on the analytic candidates.
     cands = jnp.stack([f_ref, f_eq, f_uni])  # (3, K)
-    cands = jnp.maximum(cands, min_fraction)
+    if live is None:
+        cands = jnp.maximum(cands, min_fraction)
+    else:
+        cands = jnp.where(live > 0, jnp.maximum(cands, min_fraction), 0.0)
     cands = cands / jnp.sum(cands, axis=-1, keepdims=True)
     scores = jax.vmap(
         lambda f: evaluate(
@@ -343,7 +431,9 @@ def solve_fractions(
 def propose(
     state: SchedulerState, config: SchedulerConfig = SchedulerConfig()
 ) -> Tuple[Array, ProposeStats]:
-    """Objective-optimal fractions under the current beliefs."""
+    """Objective-optimal fractions under the current beliefs.
+
+    On a capacity-slot state, dead slots receive exactly zero fraction."""
     return solve_fractions(
         unit_params(state),
         objective=config.objective,
@@ -351,6 +441,7 @@ def propose(
         lr=config.opt_lr,
         num_points=config.num_points,
         min_fraction=config.min_fraction,
+        live=state.live,
     )
 
 
@@ -387,6 +478,10 @@ def anomaly(
         if v.ndim < t.ndim:  # per-worker (K,) mask over a (K, N) batch
             v = v[..., None]
         v = jnp.broadcast_to(v, t.shape)
+    if state.live is not None:
+        # Dead capacity slots never touch an EWMA or freshness counter.
+        lv = state.live
+        v = v * (lv if v.ndim == 1 else lv[:, None])
     # Invalid slots get interior dummy values so inf/nan never reaches the
     # logpdf (0 * inf = nan would leak through the mask otherwise).
     t = jnp.where(v > 0, t, 1.0)
@@ -436,12 +531,141 @@ def flag_stragglers(
 
 
 # --------------------------------------------------------------------------
-# elastic membership (shape-changing: pure but not jittable)
+# elastic membership
 # --------------------------------------------------------------------------
 def num_workers(state: SchedulerState) -> int:
+    """Live fleet size: slot count, or the live-mask sum on a capacity state.
+
+    The capacity path syncs one scalar to the host — O(1), never a K-sized
+    transfer.
+    """
+    if state.live is None:
+        return int(state.ewma_ll.shape[0])
+    return int(jnp.sum(state.live))
+
+
+def capacity(state: SchedulerState) -> int:
+    """Allocated worker slots (== num_workers when there is no live mask)."""
     return int(state.ewma_ll.shape[0])
 
 
+# -- capacity-slot transitions (jit-native: no host hop, no leaf reshape) ---
+@functools.partial(jax.jit, static_argnames=("count", "config"))
+def admit_workers(
+    state: SchedulerState,
+    count: int,
+    config: SchedulerConfig = SchedulerConfig(),
+) -> SchedulerState:
+    """Admit ``count`` workers into dead capacity slots, entirely on device.
+
+    The lowest-priority (dead) slots are located with one argsort of the
+    live mask, re-initialized from fresh priors via scatter, and flipped
+    live — leaf shapes never change, so a jitted
+    admit -> observe -> propose cycle runs without a single retrace until
+    capacity is exhausted (then ``grow_capacity`` is the shape-changing
+    fallback).  Slots beyond the available dead count are left untouched
+    (the scatter is guarded), so over-admitting clobbers nothing.
+
+    Requires a capacity state (``init(..., capacity=)``); ``count`` is
+    static.  Admission draws come from the scheduler's PRNG stream.
+    """
+    if state.live is None:
+        raise ValueError(
+            "admit_workers needs a capacity state (init(..., capacity=)); "
+            "use add_workers for exact-size fleets"
+        )
+    key, sub = jax.random.split(state.key)
+    # Stable ascending sort puts dead slots (0.0) first, lowest index first.
+    idx = jnp.argsort(state.live, stable=True)[:count]
+    ok = state.live[idx] == 0.0  # guard: never clobber a live slot
+
+    keys = jax.random.split(sub, count)
+    if config.hierarchical:
+        from repro import hier
+
+        # Dead slots' parked posteriors are masked out of the pool.
+        lv = jnp.broadcast_to(state.live, state.ewma_ll.shape)
+        hyper = (
+            hier.fit_hyperprior_sharded(state.gibbs, config.mesh, lv)
+            if config.mesh is not None
+            else hier.fit_hyperprior(state.gibbs, lv)
+        )
+        fresh = hier.init_from_hyperprior(sub, count, hyper)
+    else:
+        fresh = jax.vmap(
+            lambda k: gibbs.init_state(k, mu_guess=config.mu_guess)
+        )(keys)
+
+    put = lambda full, new: full.at[idx].set(
+        jnp.where(
+            jnp.reshape(ok, ok.shape + (1,) * (new.ndim - 1)), new, full[idx]
+        )
+    )
+    return state._replace(
+        gibbs=jax.tree_util.tree_map(put, state.gibbs, fresh),
+        ewma_ll=put(state.ewma_ll, jnp.zeros((count,), jnp.float32)),
+        ewma_count=put(state.ewma_count, jnp.zeros((count,), jnp.int32)),
+        live=put(state.live, jnp.ones((count,), state.live.dtype)),
+        key=key,
+    )
+
+
+@jax.jit
+def retire_workers(state: SchedulerState, dead: Array) -> SchedulerState:
+    """Mark workers dead in place (elastic down-scale, entirely on device).
+
+    ``dead`` is a (capacity,) boolean/0-1 mask.  The slots' posteriors are
+    parked (ignored by observe/propose/anomaly via the live mask) and their
+    EWMA leaves are zeroed, so a later ``admit_workers`` reusing the slot
+    seeds anomaly freshness from scratch (``ewma_count == 0``).
+    """
+    if state.live is None:
+        raise ValueError(
+            "retire_workers needs a capacity state (init(..., capacity=)); "
+            "use remove_workers for exact-size fleets"
+        )
+    gone = jnp.asarray(dead).astype(state.live.dtype) > 0
+    return state._replace(
+        live=jnp.where(gone, 0.0, state.live),
+        ewma_ll=jnp.where(gone, 0.0, state.ewma_ll),
+        ewma_count=jnp.where(gone, 0, state.ewma_count),
+    )
+
+
+def grow_capacity(
+    state: SchedulerState,
+    new_capacity: int,
+    config: SchedulerConfig = SchedulerConfig(),
+) -> SchedulerState:
+    """Reallocate a capacity state with more slots (host-side fallback).
+
+    The shape-changing escape hatch for when admissions exhaust capacity:
+    leaves are padded with fresh dead slots (prior-initialized posteriors,
+    live=0).  Doubling amortizes retraces — jit signatures change only when
+    this runs.
+    """
+    cap = state.ewma_ll.shape[0]
+    if state.live is None:
+        raise ValueError("grow_capacity needs a capacity state")
+    if new_capacity <= cap:
+        return state
+    extra = new_capacity - cap
+    key, sub = jax.random.split(state.key)
+    keys = jax.random.split(sub, extra)
+    fresh = jax.vmap(
+        lambda k: gibbs.init_state(k, mu_guess=config.mu_guess)
+    )(keys)
+    cat = lambda a, b: jnp.concatenate([jnp.asarray(a), b], axis=0)
+    return state._replace(
+        gibbs=jax.tree_util.tree_map(cat, state.gibbs, fresh),
+        ewma_ll=cat(state.ewma_ll, jnp.zeros((extra,), jnp.float32)),
+        ewma_count=cat(state.ewma_count, jnp.zeros((extra,), jnp.int32)),
+        live=cat(state.live, jnp.zeros((extra,), state.live.dtype)),
+        key=key,
+    )
+
+
+# -- shape-changing path (pure but not jittable) ----------------------------
 def remove_workers(state: SchedulerState, dead: np.ndarray) -> SchedulerState:
     """Drop failed workers from the fleet (elastic down-scale)."""
     keep = np.flatnonzero(~np.asarray(dead, bool))
@@ -450,6 +674,7 @@ def remove_workers(state: SchedulerState, dead: np.ndarray) -> SchedulerState:
         gibbs=jax.tree_util.tree_map(take, state.gibbs),
         ewma_ll=take(state.ewma_ll),
         ewma_count=take(state.ewma_count),
+        live=None if state.live is None else take(state.live),
     )
 
 
@@ -503,6 +728,11 @@ def add_workers(
         ewma_count=jnp.concatenate(
             [jnp.asarray(state.ewma_count), jnp.zeros(count, jnp.int32)]
         ),
+        live=(
+            None
+            if state.live is None
+            else cat(state.live, jnp.ones((count,), state.live.dtype))
+        ),
         key=key,
     )
 
@@ -525,13 +755,16 @@ class Scheduler:
         *,
         config: Optional[SchedulerConfig] = None,
         seed: int = 0,
+        capacity: Optional[int] = None,
         **overrides,
     ):
         config = config or SchedulerConfig()
         if overrides:
             config = dataclasses.replace(config, **overrides)
         self.config = config
-        self.state = init(config, num_workers, jax.random.PRNGKey(seed))
+        self.state = init(
+            config, num_workers, jax.random.PRNGKey(seed), capacity
+        )
 
     @property
     def num_workers(self) -> int:
@@ -573,6 +806,11 @@ class Scheduler:
             self.unit_params(),
             objective=self.config.objective,
             min_per_worker=min_per_worker,
+            live=(
+                None
+                if self.state.live is None
+                else np.asarray(self.state.live) > 0
+            ),
         )
 
     # -- anomaly / straggler detection -------------------------------------
@@ -586,6 +824,8 @@ class Scheduler:
         return np.asarray(scores, np.float64)
 
     def flag_stragglers(self, threshold_sigma: float = 3.0, valid=None) -> np.ndarray:
+        if valid is None and self.state.live is not None:
+            valid = self.state.live > 0  # dead slots never skew or get flagged
         return np.asarray(
             flag_stragglers(
                 self.state.ewma_ll,
@@ -627,6 +867,24 @@ class Scheduler:
         )
 
     # -- elastic membership ------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return capacity(self.state)
+
+    def admit_workers(self, count: int) -> None:
+        """Slot-based admission; doubles capacity (host-side) only when full."""
+        cap = capacity(self.state)
+        free = cap - num_workers(self.state)
+        if count > free:
+            self.state = grow_capacity(
+                self.state, max(2 * cap, cap + count - free), self.config
+            )
+        self.state = admit_workers(self.state, count, self.config)
+
+    def retire_workers(self, dead: np.ndarray) -> None:
+        """Slot-based removal: parks the slots, leaf shapes unchanged."""
+        self.state = retire_workers(self.state, jnp.asarray(dead))
+
     def remove_workers(self, dead: np.ndarray) -> None:
         self.state = remove_workers(self.state, dead)
 

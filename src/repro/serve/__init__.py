@@ -40,7 +40,9 @@ from .service import (
     TickInfo,
     init,
     posterior_drift,
+    solve_published,
     tick,
+    tick_with_params,
 )
 
 __all__ = [
@@ -59,5 +61,7 @@ __all__ = [
     "posterior_drift",
     "push",
     "ring_init",
+    "solve_published",
     "tick",
+    "tick_with_params",
 ]

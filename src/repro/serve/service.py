@@ -47,10 +47,12 @@ from repro.sched.scheduler import (
     unit_params,
 )
 from repro.sched import scheduler as _sched
+from repro.core.compress import select_active
 from repro.hier.hyperprior import (
     Hyperprior,
     fit_hyperprior,
     hyper_init,
+    shrink,
     _surprise_body,
 )
 
@@ -95,6 +97,16 @@ class ServeConfig:
     gate_z: float = DEFAULT_GATE_Z  # z-score the calibrated gate fires at
     gate_warmup: int = DEFAULT_GATE_WARMUP  # stats observed before firing
     gate_decay: float = DEFAULT_GATE_DECAY  # EWMA decay of the baseline
+    active_size: Optional[int] = None  # compressed-posterior active set: per
+    # drain only the top-M workers (young / surprising / anomalous / stale —
+    # ``core.compress.select_active``) run the full exponent-grid program;
+    # the rest advance through the grid-free moment-matched surrogate.
+    # None = dense legacy (every worker, every drain).
+    async_propose: bool = False  # publish proposals asynchronously: the tick
+    # only marks the propose (ref/staleness bookkeeping) and the
+    # ``ServiceLoop`` dispatches the simplex solve OFF the tick path,
+    # publishing into the double-buffered slot when the solve completes
+    # (version bump preserved).  False = legacy in-tick synchronous solve.
 
 
 class ServeState(NamedTuple):
@@ -112,6 +124,9 @@ class ServeState(NamedTuple):
     gate: GateState  # EWMA baseline of the drift statistic
     hyper: Hyperprior  # pooled fleet prior (refit every hyper_refit_every)
     hyper_age: Array  # int32, drains since the last hyperprior refit
+    refresh_age: Optional[Array] = None  # (K,) int32, drains since each
+    # worker's last full grid refresh; allocated only under
+    # ``config.active_size`` (None = dense legacy, structurally unchanged)
 
 
 class TickInfo(NamedTuple):
@@ -175,26 +190,83 @@ def init(config: ServeConfig, num_workers: int, key: Array) -> ServeState:
             hyper_init(config.sched.mu_guess),
         ),
         hyper_age=jnp.asarray(config.sched.hyper_refit_every, jnp.int32),
+        # Ages start saturated so the first drains cycle every worker
+        # through a full grid refresh before any surrogate is trusted.
+        refresh_age=(
+            None
+            if config.active_size is None
+            else jnp.full((k,), 1_000_000, jnp.int32)
+        ),
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("config",), donate_argnums=(0,)
-)
-def tick(
-    state: ServeState, config: ServeConfig = ServeConfig()
-) -> Tuple[ServeState, TickInfo]:
+@functools.partial(jax.jit, static_argnames=("config",))
+def solve_published(
+    cur: UnitParams,
+    config: ServeConfig = ServeConfig(),
+    live: Optional[Array] = None,
+) -> Tuple[Array, ProposeStats]:
+    """The publish-grade simplex solve, as its own dispatchable program.
+
+    Exactly the solve the synchronous tick runs inline; split out so
+    ``async_propose`` can launch it OFF the tick path (JAX dispatch is
+    asynchronous — the call returns as soon as the program is enqueued) and
+    publish on completion.
+    """
+    fr, st = solve_fractions(
+        cur,
+        objective=config.sched.objective,
+        steps=config.sched.opt_steps,
+        lr=config.sched.opt_lr,
+        num_points=config.sched.num_points,
+        min_fraction=config.sched.min_fraction,
+        live=live,
+    )
+    return fr.astype(jnp.float32), ProposeStats(
+        e_t=st.e_t.astype(jnp.float32),
+        var=st.var.astype(jnp.float32),
+        score=st.score.astype(jnp.float32),
+    )
+
+
+def _tick_body(
+    state: ServeState, config: ServeConfig
+) -> Tuple[ServeState, TickInfo, UnitParams]:
     """One service beat: drain -> observe -> drift-gated propose.
 
-    The input state is DONATED: its buffers are reused for the output state
-    (zero-copy advance — a regression test pins the no-growth invariant).
     An empty ring is a true no-op on the beliefs (the Gibbs advance is
     skipped under ``lax.cond``, so not even the PRNG key moves); the
     propose branch runs only on posterior drift or staleness expiry.
+    Also returns the post-advance point estimates so the async shell can
+    hand them to the off-path solve without re-deriving them.
     """
     drained = state.ring.count
     has_data = drained > 0
     batch, ring = drain(state.ring)
+
+    # -- active-set selection (static branch; shapes fixed by active_size) --
+    k = state.fractions.shape[0]
+    active_idx = None
+    refresh_age = state.refresh_age
+    if config.active_size is not None and config.active_size < k:
+        m = config.active_size
+        active_idx, _ = select_active(
+            m,
+            age=state.refresh_age,
+            nu=state.sched.gibbs.ng.nu0,
+            surprise=(
+                _surprise_body(state.sched.gibbs, state.hyper)
+                if config.sched.hierarchical
+                else None
+            ),
+            anomaly=state.sched.ewma_ll,
+            live=state.sched.live,
+        )
+        refresh_age = jnp.where(
+            has_data,
+            (state.refresh_age + 1).at[active_idx].set(0),
+            state.refresh_age,
+        )
 
     def advance(sched_state):
         fleet, ll = advance_fleet(
@@ -203,6 +275,7 @@ def tick(
             batch.fracs,
             config.sched,
             mask=batch.mask,
+            active_idx=active_idx,
         )
         return (
             sched_state._replace(gibbs=fleet, step=sched_state.step + 1),
@@ -214,7 +287,6 @@ def tick(
 
     new_sched, ll = jax.lax.cond(has_data, advance, hold, state.sched)
 
-    cur = unit_params(new_sched)
     # -- gate statistic (static branch: config is jit-static) ---------------
     if config.sched.hierarchical:
         # Refit the pooled fleet prior every hyper_refit_every drains,
@@ -236,9 +308,28 @@ def tick(
         drift = jnp.max(_surprise_body(new_sched.gibbs, hyper)).astype(
             jnp.float32
         )
+        # Mid-life shrinkage on the refit cadence (ROADMAP PR 7 follow-up):
+        # drift is scored on the UN-shrunk posteriors (shrinking first would
+        # blunt the very statistic that detects the drifter), then every
+        # worker is blended toward the fresh pool, ESS-weighted — converged
+        # workers barely move, cold/drifting ones are pulled in.
+        new_sched = jax.lax.cond(
+            refit_due,
+            lambda s: s._replace(
+                gibbs=shrink(
+                    s.gibbs, hyper, strength=config.sched.hyper_strength
+                )
+            ),
+            lambda s: s,
+            new_sched,
+        )
     else:
         hyper, hyper_age = state.hyper, state.hyper_age
-        drift = posterior_drift(state.ref, cur).astype(jnp.float32)
+        drift = posterior_drift(
+            state.ref, unit_params(new_sched)
+        ).astype(jnp.float32)
+
+    cur = unit_params(new_sched)
 
     staleness = state.staleness + has_data.astype(jnp.int32)
     # -- gate decision (static branch on the configured threshold) ----------
@@ -259,32 +350,27 @@ def tick(
             | (staleness >= config.max_staleness)
         )
 
-    def do_propose(_):
-        fr, st = solve_fractions(
-            cur,
-            objective=config.sched.objective,
-            steps=config.sched.opt_steps,
-            lr=config.sched.opt_lr,
-            num_points=config.sched.num_points,
-            min_fraction=config.sched.min_fraction,
+    if config.async_propose:
+        # The solve leaves the tick: only the bookkeeping happens here
+        # (ref/staleness/counters); the shell dispatches ``solve_published``
+        # and flips the double buffer when it completes.
+        fractions, stats = state.fractions, state.stats
+        ref = jax.tree_util.tree_map(
+            lambda old, new: jnp.where(should, new, old), state.ref, cur
         )
-        return (
-            fr.astype(jnp.float32),
-            ProposeStats(
-                e_t=st.e_t.astype(jnp.float32),
-                var=st.var.astype(jnp.float32),
-                score=st.score.astype(jnp.float32),
-            ),
-            cur,
-            jnp.zeros((), jnp.int32),
+        staleness = jnp.where(should, 0, staleness)
+    else:
+
+        def do_propose(_):
+            fr, st = solve_published(cur, config, new_sched.live)
+            return fr, st, cur, jnp.zeros((), jnp.int32)
+
+        def skip(_):
+            return state.fractions, state.stats, state.ref, staleness
+
+        fractions, stats, ref, staleness = jax.lax.cond(
+            should, do_propose, skip, None
         )
-
-    def skip(_):
-        return state.fractions, state.stats, state.ref, staleness
-
-    fractions, stats, ref, staleness = jax.lax.cond(
-        should, do_propose, skip, None
-    )
 
     new_state = ServeState(
         sched=new_sched,
@@ -299,10 +385,41 @@ def tick(
         gate=gate,
         hyper=hyper,
         hyper_age=hyper_age,
+        refresh_age=refresh_age,
     )
     return new_state, TickInfo(
         ll=ll, proposed=should, drift=drift, drained=drained
-    )
+    ), cur
+
+
+@functools.partial(
+    jax.jit, static_argnames=("config",), donate_argnums=(0,)
+)
+def tick(
+    state: ServeState, config: ServeConfig = ServeConfig()
+) -> Tuple[ServeState, TickInfo]:
+    """One service beat (see ``_tick_body``).
+
+    The input state is DONATED: its buffers are reused for the output state
+    (zero-copy advance — a regression test pins the no-growth invariant).
+    """
+    new_state, info, _ = _tick_body(state, config)
+    return new_state, info
+
+
+@functools.partial(
+    jax.jit, static_argnames=("config",), donate_argnums=(0,)
+)
+def tick_with_params(
+    state: ServeState, config: ServeConfig = ServeConfig()
+) -> Tuple[ServeState, TickInfo, UnitParams]:
+    """``tick`` that also returns the post-advance point estimates.
+
+    The async shell's entry: when ``info.proposed`` fires it hands the
+    returned ``UnitParams`` straight to ``solve_published`` — no second
+    derivation from (donated) state.
+    """
+    return _tick_body(state, config)
 
 
 class ServiceLoop:
@@ -341,6 +458,7 @@ class ServiceLoop:
         ]
         self._active = 0
         self._version = 0
+        self._pending: Optional[Tuple[Array, ProposeStats]] = None
 
     # -- ingestion (producer side) -----------------------------------------
     def push(self, fracs, times, valid=None) -> None:
@@ -355,14 +473,50 @@ class ServiceLoop:
 
     # -- the service beat (estimator side) ---------------------------------
     def tick(self) -> TickInfo:
-        """Drain + observe (+ propose iff the posterior moved); publish."""
+        """Drain + observe (+ propose iff the posterior moved); publish.
+
+        With ``config.async_propose`` the solve never runs inside this call:
+        a fired gate dispatches ``solve_published`` (async JAX dispatch —
+        enqueue and return) and each subsequent beat polls for completion,
+        publishing into the inactive buffer and bumping ``version`` exactly
+        as the synchronous path does.  A solve already in flight suppresses
+        re-dispatch; the gate refires on a later beat if drift persists.
+        """
+        if self.config.async_propose:
+            self.poll()
+            self.state, info, cur = tick_with_params(self.state, self.config)
+            if bool(info.proposed) and self._pending is None:
+                self._pending = solve_published(
+                    cur, self.config, self.state.sched.live
+                )
+            return info
         self.state, info = tick(self.state, self.config)
         if bool(info.proposed):  # host-syncs the tiny flag, not the fleet
-            inactive = 1 - self._active
-            self._slots[inactive][:] = np.asarray(self.state.fractions)
-            self._active = inactive  # atomic flip: readers see old or new
-            self._version += 1
+            self._publish(self.state.fractions)
         return info
+
+    def poll(self) -> bool:
+        """Publish a completed async solve, if any; never blocks.
+
+        Returns True iff a new split was published.  ``jax.Array.is_ready``
+        is the non-blocking completion probe; an unfinished solve leaves
+        everything untouched.
+        """
+        if self._pending is None:
+            return False
+        fr, st = self._pending
+        if not fr.is_ready():
+            return False
+        self._pending = None
+        self.state = self.state._replace(fractions=fr, stats=st)
+        self._publish(fr)
+        return True
+
+    def _publish(self, fractions) -> None:
+        inactive = 1 - self._active
+        self._slots[inactive][:] = np.asarray(fractions)
+        self._active = inactive  # atomic flip: readers see old or new
+        self._version += 1
 
     # -- publication (reader side; never blocks) ---------------------------
     def fractions(self) -> np.ndarray:

@@ -1,0 +1,232 @@
+"""Compressed posterior + active-set path: surrogate accuracy, M=K bitwise
+parity with the dense program, kernel scatter write-back, selection policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compress, gibbs
+from repro.core.moments import BetaParams, exponent_grid
+from repro.kernels import ops
+from repro import sched
+
+
+def _fleet_telemetry(key, k=6, n=24, noise=0.05):
+    kf, kt = jax.random.split(key)
+    f = jax.random.uniform(kf, (k, n), minval=0.1, maxval=0.9)
+    mu = jnp.linspace(5.0, 25.0, k)[:, None]
+    t = f**0.8 * mu * jnp.exp(noise * jax.random.normal(kt, (k, n)))
+    return t, f
+
+
+def tree_equal(a, b):
+    return jax.tree_util.tree_all(
+        jax.tree_util.tree_map(lambda x, y: jnp.array_equal(x, y), a, b)
+    )
+
+
+# -----------------------------------------------------------------------
+# surrogate accuracy
+# -----------------------------------------------------------------------
+def test_surrogate_moments_match_grid_on_converged_worker():
+    """Acceptance bound: |E_grid - E_beta| < 1e-3 once a worker converges."""
+    key = jax.random.PRNGKey(42)
+    f = jax.random.uniform(key, (2048,), minval=0.1, maxval=0.9)
+    t = f**0.8 * 10.0 * jnp.exp(0.02 * jax.random.normal(key, (2048,)))
+    state, _ = gibbs.fit(key, t, f, batch_size=64, n_iters=4, grid_size=256)
+
+    # a fresh drain-sized batch must barely move the converged posterior
+    k2 = jax.random.PRNGKey(7)
+    f2 = jax.random.uniform(k2, (8,), minval=0.1, maxval=0.9)
+    t2 = f2**0.8 * 10.0 * jnp.exp(0.02 * jax.random.normal(k2, (8,)))
+    mean_gap, var_gap = compress.surrogate_gap(state, t2, f2, grid_size=256)
+    assert float(jnp.max(mean_gap)) < 1e-3
+    assert float(jnp.max(var_gap)) < 1e-4
+
+
+def test_surrogate_gap_large_for_cold_worker():
+    """A cold worker's grid posterior is data-dominated: the frozen prior
+    surrogate must NOT claim to match it (this is why cold workers belong
+    in the active set)."""
+    key = jax.random.PRNGKey(0)
+    f = jax.random.uniform(key, (32,), minval=0.1, maxval=0.9)
+    t = f**0.3 * 10.0  # strongly sub-linear: far from the Beta(2,2) prior
+    state = gibbs.init_state(key, mu_guess=10.0)
+    mean_gap, _ = compress.surrogate_gap(state, t, f, grid_size=128)
+    assert float(jnp.max(mean_gap)) > 1e-2
+
+
+def test_fit_surrogate_roundtrip():
+    """Moment-fitting the grid then taking Beta moments reproduces the grid
+    moments (the method-of-moments fit is exact in its first two moments)."""
+    key = jax.random.PRNGKey(3)
+    t, f = _fleet_telemetry(key, k=4)
+    state, _ = gibbs.fit_fleet(key, t, f, n_iters=3, grid_size=128)
+    a_fit, b_fit = compress.fit_surrogate(state, t, f, grid_size=128)
+    ge, gv = compress.grid_moments(state, t, f, grid_size=128)
+    ea, va = compress.beta_moments(a_fit)
+    eb, vb = compress.beta_moments(b_fit)
+    np.testing.assert_allclose(np.asarray(ea), np.asarray(ge[..., 0]), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(eb), np.asarray(ge[..., 1]), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(va), np.asarray(gv[..., 0]), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(vb), np.asarray(gv[..., 1]), atol=2e-5)
+
+
+def test_lognormal_moment_fit():
+    m, s2 = compress.fit_lognormal_moments(jnp.asarray(3.0), jnp.asarray(0.5))
+    mean = jnp.exp(m + 0.5 * s2)
+    var = (jnp.exp(s2) - 1.0) * jnp.exp(2.0 * m + s2)
+    assert abs(float(mean) - 3.0) < 1e-5
+    assert abs(float(var) - 0.5) < 1e-5
+
+
+# -----------------------------------------------------------------------
+# active-subset advance: bitwise parity at M = K, frozen surrogate at M < K
+# -----------------------------------------------------------------------
+def test_gibbs_batch_active_full_set_bitwise_dense():
+    key = jax.random.PRNGKey(1)
+    t, f = _fleet_telemetry(key)
+    k = t.shape[0]
+    states, _ = gibbs.fit_fleet(key, t, f, n_iters=2, grid_size=64)
+
+    dense, ll_d = gibbs.gibbs_batch(states, t, f, n_iters=3, grid_size=64)
+    active, ll_a = gibbs.gibbs_batch(
+        states, t, f, n_iters=3, grid_size=64, active_idx=jnp.arange(k)
+    )
+    assert tree_equal(dense, active)
+    assert bool(jnp.array_equal(ll_d, ll_a))
+
+
+def test_advance_fleet_active_full_set_bitwise_dense():
+    """Through the scheduler path too — including the discount pairing."""
+    key = jax.random.PRNGKey(2)
+    t, f = _fleet_telemetry(key)
+    k = t.shape[0]
+    config = sched.SchedulerConfig(n_iters=3, grid_size=64)
+    states, _ = gibbs.fit_fleet(key, t, f, n_iters=2, grid_size=64)
+
+    dense, ll_d = sched.advance_fleet(states, t, f, config)
+    active, ll_a = sched.advance_fleet(
+        states, t, f, config, active_idx=jnp.arange(k)
+    )
+    assert tree_equal(dense, active)
+    assert bool(jnp.array_equal(ll_d, ll_a))
+
+
+def test_active_rows_match_dense_and_rest_keep_frozen_priors():
+    key = jax.random.PRNGKey(4)
+    t, f = _fleet_telemetry(key)
+    states, _ = gibbs.fit_fleet(key, t, f, n_iters=2, grid_size=64)
+    idx = jnp.asarray([1, 4])
+
+    dense, _ = gibbs.gibbs_batch(states, t, f, n_iters=2, grid_size=64)
+    part, _ = gibbs.gibbs_batch(
+        states, t, f, n_iters=2, grid_size=64, active_idx=idx
+    )
+    # active rows: bitwise the dense program's same rows
+    take = lambda tree: jax.tree_util.tree_map(lambda x: x[idx], tree)
+    assert tree_equal(take(dense), take(part))
+    # surrogate rows: exponent Beta priors frozen exactly
+    rest = np.asarray([0, 2, 3, 5])
+    for p_old, p_new in (
+        (states.alpha_prior, part.alpha_prior),
+        (states.beta_prior, part.beta_prior),
+    ):
+        assert bool(jnp.array_equal(p_old.a[rest], p_new.a[rest]))
+        assert bool(jnp.array_equal(p_old.b[rest], p_new.b[rest]))
+    # but their conjugate NG block still learned from the batch
+    assert not bool(jnp.array_equal(states.ng.mu0[rest], part.ng.mu0[rest]))
+    # and the PRNG stream advanced identically to the dense program
+    assert bool(jnp.array_equal(dense.key, part.key))
+
+
+def test_advance_fleet_discount_freezes_surrogate_priors():
+    """Power-prior forgetting of the Beta priors pairs with the grid re-fit:
+    surrogate workers must skip BOTH (no widening without re-learning)."""
+    key = jax.random.PRNGKey(5)
+    t, f = _fleet_telemetry(key)
+    config = sched.SchedulerConfig(n_iters=2, grid_size=64, discount=0.7)
+    states, _ = gibbs.fit_fleet(key, t, f, n_iters=2, grid_size=64)
+    idx = jnp.asarray([0, 3])
+    out, _ = sched.advance_fleet(states, t, f, config, active_idx=idx)
+    rest = np.asarray([1, 2, 4, 5])
+    assert bool(jnp.array_equal(states.alpha_prior.a[rest], out.alpha_prior.a[rest]))
+    assert bool(jnp.array_equal(states.beta_prior.b[rest], out.beta_prior.b[rest]))
+
+
+def test_gibbs_batch_active_rejects_sharding():
+    key = jax.random.PRNGKey(0)
+    t, f = _fleet_telemetry(key, k=2)
+    states, _ = gibbs.fit_fleet(key, t, f, n_iters=1, grid_size=32)
+    from repro.core.sharding import ShardingConfig
+
+    with pytest.raises(ValueError):
+        gibbs.gibbs_batch(
+            states, t, f, n_iters=1, grid_size=32,
+            active_idx=jnp.arange(2), sharding=ShardingConfig.auto(),
+        )
+
+
+# -----------------------------------------------------------------------
+# kernel-layer active-subset launch
+# -----------------------------------------------------------------------
+def _kernel_args(key, k=5, n=16, g=32):
+    t, f = _fleet_telemetry(key, k=k, n=n)
+    grid = exponent_grid(g)
+    mu = jnp.linspace(5.0, 25.0, k)
+    lam = jnp.full((k,), 2.0)
+    alpha = jnp.full((k,), 0.7)
+    beta = jnp.full((k,), 0.4)
+    pri = BetaParams(jnp.full((k,), 2.0), jnp.full((k,), 2.0))
+    return grid, t, f, mu, lam, alpha, beta, pri, pri
+
+
+def test_posterior_grid_fleet_active_full_set_bitwise():
+    args = _kernel_args(jax.random.PRNGKey(6))
+    k = args[1].shape[0]
+    dense = ops.posterior_grid_fleet(*args)
+    active = ops.posterior_grid_fleet(*args, active_idx=jnp.arange(k))
+    assert bool(jnp.array_equal(dense, active))
+
+
+def test_posterior_grid_fleet_active_scatter_writeback():
+    args = _kernel_args(jax.random.PRNGKey(7))
+    dense = ops.posterior_grid_fleet(*args)
+    idx = jnp.asarray([0, 2])
+    # fresh cache: non-active rows zero
+    out = ops.posterior_grid_fleet(*args, active_idx=idx)
+    assert bool(jnp.array_equal(out[idx], dense[idx]))
+    assert bool(jnp.all(out[jnp.asarray([1, 3, 4])] == 0.0))
+    # persistent cache: non-active rows keep their previous values
+    prev = jnp.full_like(dense, 7.0)
+    out2 = ops.posterior_grid_fleet(*args, active_idx=idx, out_prev=prev)
+    assert bool(jnp.array_equal(out2[idx], dense[idx]))
+    assert bool(jnp.all(out2[jnp.asarray([1, 3, 4])] == 7.0))
+
+
+# -----------------------------------------------------------------------
+# selection policy + footprint accounting
+# -----------------------------------------------------------------------
+def test_select_active_prefers_young_surprising_stale():
+    k = 8
+    age = jnp.zeros((k,), jnp.int32).at[5].set(100)  # 5: stale surrogate
+    nu = jnp.full((k,), 200.0).at[2].set(1.0)  # 2: young
+    surprise = jnp.zeros((k,)).at[6].set(50.0)  # 6: drifting
+    idx, pri = compress.select_active(3, age=age, nu=nu, surprise=surprise)
+    assert set(np.asarray(idx).tolist()) == {2, 5, 6}
+    assert pri.shape == (k,)
+
+
+def test_select_active_excludes_dead_slots():
+    k = 6
+    live = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0])
+    idx, _ = compress.select_active(
+        4, age=jnp.full((k,), 10, jnp.int32), live=live
+    )
+    assert set(np.asarray(idx).tolist()) == {0, 2, 3, 5}
+
+
+def test_compression_report_hits_10x_at_fleet_scale():
+    rep = compress.compression_report(100_000, 512, 4096)
+    assert rep.ratio >= 10.0
+    assert rep.dense_bytes > 400e6  # the ROADMAP's stated wall

@@ -1,0 +1,194 @@
+"""Elastic membership on capacity slots: device-resident admit/retire with a
+live mask, mesh-path round-trips, EWMA/live consistency, and zero-retrace
+jitted cycles under fixed capacity."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sched
+from repro.core.sharding import ShardingConfig
+
+CFG = sched.SchedulerConfig(n_iters=2, grid_size=32, num_points=64, opt_steps=10)
+
+
+def _telemetry(key, k, n=16):
+    f = jax.random.uniform(key, (k, n), minval=0.1, maxval=0.9)
+    t = f**0.9 * jnp.linspace(5.0, 25.0, k)[:, None]
+    return sched.Telemetry(fracs=f, times=t)
+
+
+def test_capacity_init_shapes_and_live_mask():
+    state = sched.init(CFG, num_workers=3, key=jax.random.PRNGKey(0), capacity=8)
+    assert sched.capacity(state) == 8
+    assert sched.num_workers(state) == 3
+    np.testing.assert_array_equal(
+        np.asarray(state.live), [1, 1, 1, 0, 0, 0, 0, 0]
+    )
+    assert state.ewma_ll.shape == (8,)
+
+
+def test_exact_size_init_keeps_legacy_treedef():
+    """Without capacity, live is None — the pytree structure (and therefore
+    every jit cache and checkpoint layout) is unchanged from the legacy."""
+    legacy = sched.init(CFG, num_workers=3, key=jax.random.PRNGKey(0))
+    assert legacy.live is None
+    cap = sched.init(CFG, num_workers=3, key=jax.random.PRNGKey(0), capacity=8)
+    assert len(jax.tree_util.tree_leaves(cap)) == len(
+        jax.tree_util.tree_leaves(legacy)
+    ) + 1
+
+
+def test_admit_retire_roundtrip_and_ewma_consistency():
+    state = sched.init(CFG, num_workers=5, key=jax.random.PRNGKey(0), capacity=8)
+    tel = _telemetry(jax.random.PRNGKey(1), 8)
+    state, _ = sched.observe(state, tel, CFG)
+    state, _ = sched.anomaly(state, tel, CFG)  # populate EWMA freshness
+
+    state = sched.admit_workers(state, 2, CFG)
+    assert sched.num_workers(state) == 7
+    np.testing.assert_array_equal(
+        np.asarray(state.live), [1, 1, 1, 1, 1, 1, 1, 0]
+    )
+
+    dead = np.zeros(8, bool)
+    dead[2] = True
+    state = sched.retire_workers(state, jnp.asarray(dead))
+    assert sched.num_workers(state) == 6
+    # retired slot: parked with EWMA freshness zeroed so a later admit
+    # re-seeds anomaly statistics from scratch
+    assert float(state.live[2]) == 0.0
+    assert float(state.ewma_ll[2]) == 0.0
+    assert int(state.ewma_count[2]) == 0
+    # survivors keep their learned statistics
+    assert int(state.ewma_count[0]) > 0
+
+    # the freed slot is the lowest dead slot -> next admit reuses it
+    state = sched.admit_workers(state, 1, CFG)
+    assert float(state.live[2]) == 1.0
+    assert int(state.ewma_count[2]) == 0
+    assert sched.num_workers(state) == 7
+
+
+def test_over_admission_never_clobbers_live_slots():
+    state = sched.init(CFG, num_workers=7, key=jax.random.PRNGKey(0), capacity=8)
+    tel = _telemetry(jax.random.PRNGKey(1), 8)
+    state, _ = sched.observe(state, tel, CFG)
+    before = state.gibbs.ng.mu0
+    state = sched.admit_workers(state, 3, CFG)  # only 1 slot free
+    assert sched.num_workers(state) == 8
+    # the 7 originally-live posteriors were not re-initialized
+    np.testing.assert_array_equal(
+        np.asarray(before[:7]), np.asarray(state.gibbs.ng.mu0[:7])
+    )
+
+
+def test_dead_slots_get_exactly_zero_fraction():
+    state = sched.init(CFG, num_workers=6, key=jax.random.PRNGKey(0), capacity=6)
+    tel = _telemetry(jax.random.PRNGKey(1), 6)
+    state, _ = sched.observe(state, tel, CFG)
+    dead = np.zeros(6, bool)
+    dead[1] = dead[4] = True
+    state = sched.retire_workers(state, jnp.asarray(dead))
+    fr, stats = sched.propose(state, CFG)
+    fr = np.asarray(fr)
+    assert fr[1] == 0.0 and fr[4] == 0.0
+    assert abs(fr.sum() - 1.0) < 1e-5
+    assert np.all(fr[[0, 2, 3, 5]] > 0.0)
+    assert np.isfinite(float(stats.e_t))
+
+
+def test_anomaly_ignores_dead_slots():
+    state = sched.init(CFG, num_workers=4, key=jax.random.PRNGKey(0), capacity=4)
+    tel = _telemetry(jax.random.PRNGKey(1), 4)
+    state, _ = sched.observe(state, tel, CFG)
+    dead = np.zeros(4, bool)
+    dead[3] = True
+    state = sched.retire_workers(state, jnp.asarray(dead))
+    state, scores = sched.anomaly(state, tel, CFG)
+    assert int(state.ewma_count[3]) == 0  # dead slot accumulates nothing
+    assert float(scores[3]) == 0.0
+
+
+def test_jitted_admit_observe_propose_cycle_zero_retrace():
+    """The elastic cycle under capacity compiles ONCE: leaf shapes are fixed
+    at the capacity, membership changes are data, not structure."""
+    state = sched.init(CFG, num_workers=2, key=jax.random.PRNGKey(0), capacity=8)
+    traces = []
+
+    @functools.partial(jax.jit, static_argnames=("config",))
+    def cycle(state, telemetry, config):
+        traces.append(1)  # appends only while tracing
+        state = sched.admit_workers(state, 1, config)
+        state, _ = sched.observe(state, telemetry, config)
+        fr, _ = sched.propose(state, config)
+        return state, fr
+
+    rng = jax.random.PRNGKey(1)
+    for i in range(5):  # 2 live -> 7 live, capacity 8 throughout
+        state, fr = cycle(state, _telemetry(jax.random.fold_in(rng, i), 8), CFG)
+    jax.block_until_ready(fr)
+    assert len(traces) == 1
+    assert sched.num_workers(state) == 7
+    assert abs(float(jnp.sum(fr)) - 1.0) < 1e-5
+
+
+def test_grow_capacity_pads_dead_slots():
+    state = sched.init(CFG, num_workers=3, key=jax.random.PRNGKey(0), capacity=4)
+    grown = sched.grow_capacity(state, 10, CFG)
+    assert sched.capacity(grown) == 10
+    assert sched.num_workers(grown) == 3
+    np.testing.assert_array_equal(np.asarray(grown.live[4:]), np.zeros(6))
+    # no-op when already large enough
+    assert sched.grow_capacity(grown, 4, CFG) is grown
+
+
+def test_mesh_path_admit_retire_roundtrip():
+    """The same elastic transitions on a mesh-constrained capacity state."""
+    cfg = ShardingConfig.auto()
+    config = sched.SchedulerConfig(
+        n_iters=2, grid_size=32, num_points=64, opt_steps=10, mesh=cfg
+    )
+    state = sched.init(config, num_workers=4, key=jax.random.PRNGKey(0),
+                       capacity=8)
+    tel = _telemetry(jax.random.PRNGKey(1), 8)
+    state, _ = sched.observe(state, tel, config)
+    state = sched.admit_workers(state, 2, config)
+    assert sched.num_workers(state) == 6
+    dead = np.zeros(8, bool)
+    dead[0] = True
+    state = sched.retire_workers(state, jnp.asarray(dead))
+    assert sched.num_workers(state) == 5
+    state, _ = sched.observe(state, tel, config)
+    fr, _ = sched.propose(state, config)
+    fr = np.asarray(fr)
+    assert fr[0] == 0.0 and abs(fr.sum() - 1.0) < 1e-5
+
+
+def test_host_add_remove_still_work_on_capacity_states():
+    """The shape-changing fallback path carries the live leaf through."""
+    state = sched.init(CFG, num_workers=3, key=jax.random.PRNGKey(0), capacity=4)
+    bigger = sched.add_workers(state, 2, CFG)
+    assert sched.capacity(bigger) == 6
+    assert sched.num_workers(bigger) == 5  # new rows admitted live
+    smaller = sched.remove_workers(bigger, np.asarray([0, 1, 0, 0, 0, 0], bool))
+    assert sched.capacity(smaller) == 5
+    assert smaller.live is not None
+
+
+def test_scheduler_shell_elastic_api():
+    s = sched.Scheduler(3, config=CFG, seed=0, capacity=4)
+    assert s.capacity == 4 and s.num_workers == 3
+    s.observe(_telemetry(jax.random.PRNGKey(1), 4))
+    s.admit_workers(1)
+    assert s.num_workers == 4 and s.capacity == 4
+    s.admit_workers(2)  # full -> shell grows capacity host-side
+    assert s.num_workers == 6 and s.capacity >= 6
+    s.retire_workers(np.asarray([True] + [False] * (s.capacity - 1)))
+    assert s.num_workers == 5
+    counts = s.propose_microbatches(64)
+    assert counts[0] == 0 and counts.sum() == 64
+    flags = s.flag_stragglers()
+    assert not flags[0]  # dead slots are never flagged
