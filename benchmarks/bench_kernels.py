@@ -159,7 +159,7 @@ def fleet_main() -> None:
 
 def main() -> None:
     key = jax.random.PRNGKey(0)
-    kf, kt = jax.random.split(key)
+    kf, kt, kdecode = jax.random.split(key, 3)
 
     # posterior grid: production telemetry scale (N=16k obs, G=512)
     n, g = 16384, 512
@@ -194,7 +194,7 @@ def main() -> None:
 
     # decode attention: 32k cache, GQA 32q/4kv heads
     b, h, kvh, d, s = 4, 32, 4, 128, 32768
-    kq, kk, kv = jax.random.split(key, 3)
+    kq, kk, kv = jax.random.split(kdecode, 3)
     q = jax.random.normal(kq, (b, h, d), jnp.bfloat16)
     kc = jax.random.normal(kk, (b, s, kvh, d), jnp.bfloat16)
     vc = jax.random.normal(kv, (b, s, kvh, d), jnp.bfloat16)

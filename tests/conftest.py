@@ -1,3 +1,5 @@
+import contextlib
+
 import jax
 import pytest
 
@@ -9,3 +11,36 @@ jax.config.update("jax_platform_name", "cpu")
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _no_host_sync_guard(request):
+    """Runtime counterpart of reprolint RL001: tests marked ``no_host_sync``
+    run under ``jax.transfer_guard("disallow")``, so any implicit host->device
+    transfer on their jitted path fails loudly instead of silently syncing.
+
+    Device->host reads are free on CPU and jitted calls stage their own
+    transfers, so in practice the guard enforces "the hot path stays inside
+    jit".  Eager setup/teardown that legitimately builds device values
+    (PRNG keys, jnp literals) belongs inside the ``host_staging`` fixture's
+    context manager, whose inner ``allow`` overrides the outer ``disallow``.
+    """
+    if request.node.get_closest_marker("no_host_sync") is None:
+        yield
+        return
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+@pytest.fixture
+def host_staging():
+    """Context manager for the sanctioned host<->device edges of a
+    ``no_host_sync`` test: setup that mints device values and assertions that
+    read them back.  Everything *outside* the ``with`` stays guarded."""
+
+    @contextlib.contextmanager
+    def staging():
+        with jax.transfer_guard("allow"):
+            yield
+
+    return staging

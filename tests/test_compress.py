@@ -31,14 +31,15 @@ def tree_equal(a, b):
 def test_surrogate_moments_match_grid_on_converged_worker():
     """Acceptance bound: |E_grid - E_beta| < 1e-3 once a worker converges."""
     key = jax.random.PRNGKey(42)
-    f = jax.random.uniform(key, (2048,), minval=0.1, maxval=0.9)
-    t = f**0.8 * 10.0 * jnp.exp(0.02 * jax.random.normal(key, (2048,)))
+    kf, kn = jax.random.split(key)
+    f = jax.random.uniform(kf, (2048,), minval=0.1, maxval=0.9)
+    t = f**0.8 * 10.0 * jnp.exp(0.02 * jax.random.normal(kn, (2048,)))
     state, _ = gibbs.fit(key, t, f, batch_size=64, n_iters=4, grid_size=256)
 
     # a fresh drain-sized batch must barely move the converged posterior
-    k2 = jax.random.PRNGKey(7)
-    f2 = jax.random.uniform(k2, (8,), minval=0.1, maxval=0.9)
-    t2 = f2**0.8 * 10.0 * jnp.exp(0.02 * jax.random.normal(k2, (8,)))
+    k2f, k2n = jax.random.split(jax.random.PRNGKey(7))
+    f2 = jax.random.uniform(k2f, (8,), minval=0.1, maxval=0.9)
+    t2 = f2**0.8 * 10.0 * jnp.exp(0.02 * jax.random.normal(k2n, (8,)))
     mean_gap, var_gap = compress.surrogate_gap(state, t2, f2, grid_size=256)
     assert float(jnp.max(mean_gap)) < 1e-3
     assert float(jnp.max(var_gap)) < 1e-4

@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import sched
 from repro.checkpoint.checkpoint import CheckpointManager
@@ -34,10 +35,15 @@ def test_state_is_pytree_of_arrays():
     assert state.gibbs.mu.shape == (3,)
 
 
-def test_jitted_observe_propose_roundtrip():
-    """observe ∘ propose composes under one jax.jit."""
-    state = sched.init(CFG, 2, jax.random.PRNGKey(0))
-    telem = _telemetry(np.random.default_rng(0), state, [5.0, 20.0])
+@pytest.mark.no_host_sync
+def test_jitted_observe_propose_roundtrip(host_staging):
+    """observe ∘ propose composes under one jax.jit — and, via the
+    ``no_host_sync`` marker, the composed call runs under
+    ``jax.transfer_guard("disallow")``: an accidental host sync inside the
+    jitted path fails here instead of shipping."""
+    with host_staging():  # eager setup mints keys and device telemetry
+        state = sched.init(CFG, 2, jax.random.PRNGKey(0))
+        telem = _telemetry(np.random.default_rng(0), state, [5.0, 20.0])
 
     @jax.jit
     def step(state, telem):
@@ -46,10 +52,11 @@ def test_jitted_observe_propose_roundtrip():
         return state, ll, fracs, stats
 
     state2, ll, fracs, stats = step(state, telem)
-    assert int(state2.step) == 1
-    assert ll.shape == (2,) and np.isfinite(np.asarray(ll)).all()
-    np.testing.assert_allclose(float(jnp.sum(fracs)), 1.0, atol=1e-5)
-    assert float(stats.e_t) > 0
+    with host_staging():  # readbacks for assertions
+        assert int(state2.step) == 1
+        assert ll.shape == (2,) and np.isfinite(np.asarray(ll)).all()
+        np.testing.assert_allclose(float(jnp.sum(fracs)), 1.0, atol=1e-5)
+        assert float(stats.e_t) > 0
 
 
 def test_online_learning_rebalances_functional():
@@ -89,8 +96,6 @@ def test_legacy_checkpoint_shape_drift_raises(tmp_path):
     legacy fallback path — model-only restore, fresh scheduler beliefs —
     triggers instead of a silent wrong-shape restore crashing mid-run at the
     first eviction."""
-    import pytest
-
     state = sched.init(CFG, 3, jax.random.PRNGKey(0))
     legacy = state._replace(ewma_count=jnp.zeros((), jnp.int32))
     ckpt = CheckpointManager(str(tmp_path), async_write=False)

@@ -175,22 +175,40 @@ def test_cadence_fires_on_drift_not_steady_state_noise():
     assert loop.version > v0  # the new split was published
 
 
-def test_empty_tick_is_noop_on_beliefs():
-    loop = serve.ServiceLoop(2, config=_steady_cfg(), seed=0)
-    before = jax.tree_util.tree_map(
-        lambda x: np.asarray(x).copy(), loop.state.sched
-    )
-    info = loop.tick()  # nothing buffered
+@pytest.mark.no_host_sync
+def test_empty_tick_is_noop_on_beliefs(host_staging):
+    with host_staging():  # constructing the loop mints device state
+        loop = serve.ServiceLoop(2, config=_steady_cfg(), seed=0)
+        before = jax.tree_util.tree_map(
+            lambda x: np.asarray(x).copy(), loop.state.sched
+        )
+    info = loop.tick()  # nothing buffered; guarded: no implicit transfers
     assert int(info.drained) == 0 and not bool(info.proposed)
-    assert _leaves_equal(before, loop.state.sched)  # not even the PRNG moved
+    with host_staging():
+        assert _leaves_equal(before, loop.state.sched)  # not even the PRNG moved
     assert loop.counters()["drains"] == 0
 
 
-def test_service_loop_learns_split_end_to_end():
+@pytest.mark.no_host_sync
+def test_service_loop_learns_split_end_to_end(host_staging):
+    """End-to-end split learning, with every ``tick`` (the production hot
+    path: drain -> observe -> maybe-propose under one jit) running under
+    ``jax.transfer_guard("disallow")`` — telemetry staging in ``push`` is
+    the only sanctioned host edge."""
     rng = np.random.default_rng(1)
     mu = np.array([2.0, 8.0])  # worker 0 is 4x faster
-    loop = serve.ServiceLoop(2, config=_steady_cfg(max_staleness=4), seed=3)
-    _push_rounds(loop, mu, 10, rng)
+    with host_staging():
+        loop = serve.ServiceLoop(2, config=_steady_cfg(max_staleness=4), seed=3)
+    fr_eq = np.full(2, 0.5, np.float32)
+    for _ in range(10):
+        with host_staging():  # host-side telemetry staging
+            for _ in range(loop.config.capacity):
+                times = (
+                    fr_eq**0.9 * mu
+                    + fr_eq**0.8 * 0.05 * mu * rng.standard_normal(2)
+                )
+                loop.push(fr_eq, times.astype(np.float32))
+        loop.tick()  # guarded: the jitted path must stay on device
     fr = loop.fractions()
     assert fr[0] > fr[1]  # the fast worker carries more
     np.testing.assert_array_equal(fr, np.asarray(loop.state.fractions))

@@ -1,0 +1,467 @@
+"""Shared per-module analysis: import aliasing, traced-context discovery, and
+value taint.
+
+Every rule visitor runs over one :class:`ModuleContext`, which computes three
+things once per file:
+
+  * **alias resolution** — ``jnp.asarray`` -> ``jax.numpy.asarray``,
+    ``pl.pallas_call`` -> ``jax.experimental.pallas.pallas_call`` and so on,
+    from the module's own imports, so rules match canonical names rather than
+    guessing at spellings;
+  * **traced functions** — the set of local functions whose bodies execute
+    under a JAX trace: decorated with ``jit``/``pmap``, passed to
+    ``jit``/``vmap``/``grad``/``shard_map``, used as a ``lax`` control-flow
+    body (``scan``/``cond``/``switch``/``while_loop``/``fori_loop``/``map``\\,
+    ``pallas_call``), nested inside a traced function, or — transitively —
+    called by one (module-local call graph fixpoint);
+  * **taint** — per traced function, which local names (may) hold traced
+    values: parameters seed the set (minus ``static_argnums``/``argnames``
+    when they can be read off the transform site) and assignments propagate
+    it.  Structural reads (``.shape``/``.ndim``/``.dtype``/``len``/
+    ``isinstance``/``is None``) yield *untraced* values — that distinction is
+    what keeps RL001/RL007 from flagging the legal static-metadata branches
+    JAX code leans on.
+
+The analysis is deliberately module-local and approximate: it never imports
+the code under inspection and prefers missing an exotic violation (aliasing
+through containers, cross-module reachability) over false-flagging idiomatic
+code.  Fixture tests pin both directions per rule.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+# Canonical prefixes understood by the rules.
+_CANONICAL_MODULE_ALIASES = {
+    "jax.numpy": "jax.numpy",
+    "numpy": "numpy",
+    "jax.lax": "jax.lax",
+    "jax.random": "jax.random",
+    "jax.experimental.pallas": "jax.experimental.pallas",
+    "jax.experimental.shard_map": "jax.experimental.shard_map",
+}
+
+# Transform callables whose *function argument(s)* execute traced.  Maps the
+# canonical callee name to the positions holding functions ("*" = every
+# positional argument, for switch's branch list).
+TRACED_FUNC_ARGS: Dict[str, Tuple[int, ...]] = {
+    "jax.jit": (0,),
+    "jax.pmap": (0,),
+    "jax.vmap": (0,),
+    "jax.grad": (0,),
+    "jax.value_and_grad": (0,),
+    "jax.checkpoint": (0,),
+    "jax.remat": (0,),
+    "jax.lax.scan": (0,),
+    "jax.lax.map": (0,),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.switch": (),  # branch *list* in position 1, handled specially
+    "jax.lax.associative_scan": (0,),
+    "jax.experimental.pallas.pallas_call": (0,),
+    "jax.experimental.shard_map.shard_map": (0,),
+}
+
+TRACED_DECORATORS = ("jax.jit", "jax.pmap", "jax.checkpoint", "jax.remat")
+
+# Attribute reads that yield static (untraced) metadata even on traced values.
+STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "sharding", "aval"})
+
+# Calls whose result is static regardless of argument taint.
+STATIC_CALLS = frozenset({"len", "isinstance", "type", "hasattr", "getattr"})
+
+
+def resolve_static_fields(call: ast.Call) -> Tuple[Set[int], Set[str]]:
+    """``static_argnums``/``static_argnames`` literals from a jit call site."""
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(node.value, int):
+                    nums.add(node.value)
+        elif kw.arg == "static_argnames":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                    names.add(node.value)
+    return nums, names
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    node: ast.AST  # FunctionDef | AsyncFunctionDef | Lambda
+    name: str  # "<lambda>" for lambdas
+    parent: Optional["FunctionInfo"]
+    traced: bool = False
+    traced_reason: str = ""
+    # True when the only evidence of tracedness is the module-local call
+    # graph ("called from traced f").  Such functions get *call-site-aware*
+    # parameter taint: only parameters that receive a tainted argument at
+    # some traced call site are seeded, which is what keeps static config
+    # objects threaded through helper calls from lighting up RL001/RL007.
+    traced_via_call: bool = False
+    # Parameters that are jit-static at every observed transform site.
+    static_params: Set[str] = dataclasses.field(default_factory=set)
+
+    @property
+    def is_lambda(self) -> bool:
+        return isinstance(self.node, ast.Lambda)
+
+    def body_statements(self) -> Sequence[ast.stmt]:
+        if isinstance(self.node, ast.Lambda):
+            return [ast.Expr(self.node.body)]
+        return self.node.body
+
+    def param_names(self) -> List[str]:
+        a = self.node.args
+        params = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+        if a.vararg:
+            params.append(a.vararg.arg)
+        if a.kwarg:
+            params.append(a.kwarg.arg)
+        return params
+
+
+class ModuleContext:
+    """One parsed module plus the shared analyses rules build on."""
+
+    def __init__(self, path: str, source: str, tree: Optional[ast.Module] = None):
+        self.path = path
+        self.source = source
+        self.source_lines = source.splitlines()
+        self.tree = tree if tree is not None else ast.parse(source, filename=path)
+        self.aliases = self._collect_aliases()
+        self.functions: List[FunctionInfo] = []
+        self.info_by_node: Dict[ast.AST, FunctionInfo] = {}
+        self._collect_functions(self.tree, parent=None)
+        self._functions_by_name: Dict[str, List[FunctionInfo]] = {}
+        for info in self.functions:
+            self._functions_by_name.setdefault(info.name, []).append(info)
+        self._taint_cache: Dict[ast.AST, Set[str]] = {}
+        self._taint_in_progress: Set[ast.AST] = set()
+        self._call_site_index: Optional[Dict[ast.AST, List[Tuple["FunctionInfo", ast.Call]]]] = None
+        self._mark_traced()
+
+    # ------------------------------------------------------------ aliases
+    def _collect_aliases(self) -> Dict[str, str]:
+        """Local name -> canonical dotted prefix (``jnp`` -> ``jax.numpy``)."""
+        aliases: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    aliases[alias.asname or alias.name.split(".")[0]] = (
+                        alias.name if alias.asname else alias.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+                for alias in node.names:
+                    aliases[alias.asname or alias.name] = f"{node.module}.{alias.name}"
+        return aliases
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted name of a Name/Attribute chain, or None."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        head = self.aliases.get(node.id, node.id)
+        return ".".join([head, *reversed(parts)])
+
+    def resolve_call(self, call: ast.Call) -> Optional[str]:
+        return self.resolve(call.func)
+
+    # ---------------------------------------------------------- functions
+    def _collect_functions(self, node: ast.AST, parent: Optional[FunctionInfo]):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                name = getattr(child, "name", "<lambda>")
+                info = FunctionInfo(node=child, name=name, parent=parent)
+                self.functions.append(info)
+                self.info_by_node[child] = info
+                self._collect_functions(child, parent=info)
+            else:
+                self._collect_functions(child, parent=parent)
+
+    def local_function(self, node: ast.AST) -> Optional[FunctionInfo]:
+        """FunctionInfo for a function reference (Name or inline Lambda)."""
+        if isinstance(node, ast.Lambda):
+            return self.info_by_node.get(node)
+        if isinstance(node, ast.Name):
+            candidates = self._functions_by_name.get(node.id)
+            if candidates:
+                return candidates[-1]
+        return None
+
+    # -------------------------------------------------------- tracedness
+    def _mark(self, info: Optional[FunctionInfo], reason: str,
+              static_params: Optional[Set[str]] = None, via_call: bool = False):
+        if info is None:
+            return
+        if static_params:
+            info.static_params |= static_params
+        if not info.traced:
+            info.traced = True
+            info.traced_reason = reason
+            info.traced_via_call = via_call
+        elif not via_call:
+            # A direct trace reason (decorator/transform site/nesting) is
+            # stronger evidence than the call-graph closure.
+            info.traced_via_call = False
+
+    def _mark_traced(self):
+        # 1. decorators
+        for info in self.functions:
+            for deco in getattr(info.node, "decorator_list", []):
+                target = deco.func if isinstance(deco, ast.Call) else deco
+                resolved = self.resolve(target)
+                if resolved in TRACED_DECORATORS or resolved == "jit":
+                    self._mark(info, f"decorated with {resolved}")
+                elif resolved in ("functools.partial", "partial") and isinstance(
+                    deco, ast.Call
+                ):
+                    inner = self.resolve(deco.args[0]) if deco.args else None
+                    if inner in TRACED_DECORATORS or inner == "jit":
+                        nums, names = resolve_static_fields(deco)
+                        params = info.param_names()
+                        names |= {params[i] for i in nums if i < len(params)}
+                        self._mark(info, f"decorated with partial({inner})", names)
+
+        # 2. transform call sites
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = self.resolve_call(node)
+            if resolved is None:
+                continue
+            key = resolved if resolved in TRACED_FUNC_ARGS else None
+            if key is None and "." not in resolved:
+                # Unimported bare spellings (fixture snippets, conftest shims).
+                key = {
+                    "jit": "jax.jit", "vmap": "jax.vmap", "pmap": "jax.pmap",
+                    "grad": "jax.grad", "scan": "jax.lax.scan",
+                    "cond": "jax.lax.cond", "switch": "jax.lax.switch",
+                    "while_loop": "jax.lax.while_loop",
+                    "fori_loop": "jax.lax.fori_loop",
+                    "pallas_call": "jax.experimental.pallas.pallas_call",
+                    "shard_map": "jax.experimental.shard_map.shard_map",
+                }.get(resolved)
+            if key is None or key not in TRACED_FUNC_ARGS:
+                continue
+            nums: Set[int] = set()
+            static_names: Set[str] = set()
+            if key == "jax.jit":
+                nums, static_names = resolve_static_fields(node)
+            for pos in TRACED_FUNC_ARGS[key]:
+                if pos < len(node.args):
+                    target = self.local_function(node.args[pos])
+                    if target is not None:
+                        extra = set(static_names)
+                        if key == "jax.jit" and not target.is_lambda:
+                            params = target.param_names()
+                            extra |= {params[i] for i in nums if i < len(params)}
+                        self._mark(target, f"passed to {key}", extra)
+            if key == "jax.lax.switch" and len(node.args) > 1:
+                branches = node.args[1]
+                if isinstance(branches, (ast.List, ast.Tuple)):
+                    for elt in branches.elts:
+                        self._mark(self.local_function(elt), "lax.switch branch")
+
+        # 3. nesting: functions defined inside a traced function run traced
+        changed = True
+        while changed:
+            changed = False
+            for info in self.functions:
+                if not info.traced and info.parent is not None and info.parent.traced:
+                    self._mark(info, f"nested in traced {info.parent.name}")
+                    changed = True
+            # 4. module-local call-graph closure: f traced and f's body calls g
+            for info in self.functions:
+                if not info.traced:
+                    continue
+                for node in self._walk_own_body(info):
+                    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                        callee = self.local_function(node.func)
+                        if callee is not None and not callee.traced:
+                            self._mark(
+                                callee,
+                                f"called from traced {info.name}",
+                                via_call=True,
+                            )
+                            changed = True
+
+    def _walk_own_body(self, info: FunctionInfo):
+        """Walk a function body without descending into nested defs/lambdas."""
+        stack: List[ast.AST] = list(info.body_statements())
+        while stack:
+            node = stack.pop()
+            yield node
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                    continue
+                stack.append(child)
+
+    def traced_functions(self) -> List[FunctionInfo]:
+        return [f for f in self.functions if f.traced]
+
+    # -------------------------------------------------------------- taint
+    def tainted_names(self, info: FunctionInfo) -> Set[str]:
+        """Names that (may) hold traced values inside a traced function.
+
+        Entry points (decorated / passed to a transform) seed with their
+        parameters minus jit-static ones.  Functions traced only via the
+        call graph seed with the parameters that actually *receive* a
+        tainted argument at some traced call site — a helper that only ever
+        gets the static config threaded through stays clean.  Nested traced
+        functions additionally inherit the enclosing function's taint, so
+        closure reads flow.  The seed is closed over assignments in two
+        passes so loop-carried rebindings converge; results are memoized
+        per function, with recursion through the call graph falling back to
+        the conservative all-params seed.
+        """
+        key = info.node
+        cached = self._taint_cache.get(key)
+        if cached is not None:
+            return cached
+        if key in self._taint_in_progress:
+            return {p for p in info.param_names() if p not in info.static_params}
+        self._taint_in_progress.add(key)
+        try:
+            tainted = self._seed_taint(info)
+            self._propagate_taint(info, tainted)
+        finally:
+            self._taint_in_progress.discard(key)
+        self._taint_cache[key] = tainted
+        return tainted
+
+    def _seed_taint(self, info: FunctionInfo) -> Set[str]:
+        if info.traced_via_call:
+            sites = self._call_sites_for(info)
+            if sites:
+                seed: Set[str] = set()
+                for caller, call in sites:
+                    caller_taint = self.tainted_names(caller)
+                    seed |= self._call_param_taint(info, call, caller_taint)
+            else:
+                seed = {
+                    p for p in info.param_names() if p not in info.static_params
+                }
+        else:
+            seed = {p for p in info.param_names() if p not in info.static_params}
+        if info.parent is not None and info.parent.traced:
+            seed |= self.tainted_names(info.parent)
+            seed -= info.static_params
+        return seed
+
+    def _call_sites_for(self, callee: FunctionInfo) -> List[Tuple[FunctionInfo, ast.Call]]:
+        """Call sites of ``callee`` inside traced functions (indexed lazily)."""
+        if self._call_site_index is None:
+            index: Dict[ast.AST, List[Tuple[FunctionInfo, ast.Call]]] = {}
+            for info in self.traced_functions():
+                for node in self._walk_own_body(info):
+                    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                        target = self.local_function(node.func)
+                        if target is not None and target.traced and target is not info:
+                            index.setdefault(target.node, []).append((info, node))
+            self._call_site_index = index
+        return self._call_site_index.get(callee.node, [])
+
+    def _call_param_taint(
+        self, callee: FunctionInfo, call: ast.Call, caller_taint: Set[str]
+    ) -> Set[str]:
+        """Parameters of ``callee`` bound to a tainted argument at ``call``."""
+        a = callee.node.args
+        positional = [p.arg for p in (*a.posonlyargs, *a.args)]
+        kw_capable = set(positional) | {p.arg for p in a.kwonlyargs}
+        tainted: Set[str] = set()
+        for i, arg in enumerate(call.args):
+            if isinstance(arg, ast.Starred):
+                if self.expression_tainted(arg.value, caller_taint):
+                    tainted.update(positional[i:])
+                    if a.vararg:
+                        tainted.add(a.vararg.arg)
+                continue
+            if self.expression_tainted(arg, caller_taint):
+                if i < len(positional):
+                    tainted.add(positional[i])
+                elif a.vararg:
+                    tainted.add(a.vararg.arg)
+        for kwnode in call.keywords:
+            if not self.expression_tainted(kwnode.value, caller_taint):
+                continue
+            if kwnode.arg is None:  # **kwargs: binding unknown, be conservative
+                tainted |= kw_capable
+            elif kwnode.arg in kw_capable:
+                tainted.add(kwnode.arg)
+            elif a.kwarg:
+                tainted.add(a.kwarg.arg)
+        return tainted - callee.static_params
+
+    def _propagate_taint(self, info: FunctionInfo, tainted: Set[str]) -> None:
+        for _ in range(2):
+            for node in self._walk_own_body(info):
+                targets: List[ast.expr] = []
+                if isinstance(node, ast.Assign):
+                    targets, value = node.targets, node.value
+                elif isinstance(node, ast.AugAssign):
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.For):
+                    targets, value = [node.target], node.iter
+                else:
+                    continue
+                if self.expression_tainted(value, tainted):
+                    for t in targets:
+                        for name_node in ast.walk(t):
+                            if isinstance(name_node, ast.Name):
+                                tainted.add(name_node.id)
+
+    def expression_tainted(self, expr: ast.AST, tainted: Set[str]) -> bool:
+        """Does ``expr`` (possibly) evaluate to a traced value?
+
+        Structural reads are pruned: ``x.shape``/``len(x)``/``x is None`` are
+        static even when ``x`` is traced.
+        """
+        if isinstance(expr, ast.Attribute) and expr.attr in STATIC_ATTRS:
+            return False
+        if isinstance(expr, ast.Call):
+            callee = self.resolve_call(expr)
+            if callee in STATIC_CALLS:
+                return False
+        if isinstance(expr, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in expr.ops):
+                return False
+            # String equality/membership is a config-kind dispatch, not a
+            # value read: traced arrays are never compared against strings.
+            operands = [expr.left, *expr.comparators]
+            for operand in operands:
+                if isinstance(operand, ast.Constant) and isinstance(
+                    operand.value, str
+                ):
+                    return False
+                if (
+                    isinstance(operand, (ast.Tuple, ast.List, ast.Set))
+                    and operand.elts
+                    and all(
+                        isinstance(e, ast.Constant) and isinstance(e.value, str)
+                        for e in operand.elts
+                    )
+                ):
+                    return False
+        if isinstance(expr, ast.Name):
+            return expr.id in tainted
+        return any(
+            self.expression_tainted(child, tainted)
+            for child in ast.iter_child_nodes(expr)
+        )
+
+    # ------------------------------------------------------------- helpers
+    def line(self, node: ast.AST) -> str:
+        lineno = getattr(node, "lineno", None)
+        if lineno is None or lineno > len(self.source_lines):
+            return ""
+        return self.source_lines[lineno - 1].strip()

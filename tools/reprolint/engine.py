@@ -1,0 +1,240 @@
+"""reprolint engine: file collection, rule dispatch, suppressions, baseline.
+
+Suppression syntax (same line as the finding)::
+
+    x = float(mu)  # reprolint: disable=RL001 -- host readout happens post-fit
+
+The justification after ``--`` is **required**: a bare ``disable`` both fails
+to suppress and raises the meta-finding RL000, so every exception is
+documented where it lives.
+
+The baseline is a JSON file of line-number-insensitive fingerprints
+(``rule | path | source-line``) for findings that are accepted for now;
+``--write-baseline`` emits one, ``--baseline`` filters against it.  Stale
+entries are reported so the file shrinks instead of rotting.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .context import ModuleContext
+
+SKIP_DIR_NAMES = {"__pycache__", "testdata", ".git", ".venv", "node_modules"}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*disable=(?P<rules>RL\d{3}(?:\s*,\s*RL\d{3})*)"
+    r"(?:\s*--\s*(?P<why>\S.*))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    snippet: str
+
+    @property
+    def fingerprint(self) -> str:
+        digest = hashlib.sha256(
+            "|".join((self.rule, self.path, self.snippet)).encode()
+        ).hexdigest()
+        return digest[:16]
+
+    def format_text(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "snippet": self.snippet,
+            "fingerprint": self.fingerprint,
+        }
+
+
+@dataclasses.dataclass
+class Suppression:
+    rules: Tuple[str, ...]
+    justified: bool
+    used: bool = False
+
+
+def parse_suppressions(source_lines: Sequence[str]) -> Dict[int, Suppression]:
+    """Line number (1-based) -> suppression directive on that line.
+
+    Directives are read from COMMENT tokens only, so the text
+    ``# reprolint: disable=...`` inside a string literal (docs, fixture
+    generators, this test suite) is not a directive.  If tokenization fails
+    the line-based regex is the fallback.
+    """
+    try:
+        text = "\n".join(source_lines) + "\n"
+        comments = [
+            (tok.start[0], tok.string)
+            for tok in tokenize.generate_tokens(io.StringIO(text).readline)
+            if tok.type == tokenize.COMMENT
+        ]
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        comments = list(enumerate(source_lines, start=1))
+    out: Dict[int, Suppression] = {}
+    for lineno, line in comments:
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            rules = tuple(r.strip() for r in m.group("rules").split(","))
+            out[lineno] = Suppression(rules=rules, justified=bool(m.group("why")))
+    return out
+
+
+def collect_files(paths: Iterable[Path]) -> List[Path]:
+    files: List[Path] = []
+    for path in paths:
+        if path.is_file() and path.suffix == ".py":
+            files.append(path)
+        elif path.is_dir():
+            for sub in sorted(path.rglob("*.py")):
+                parts = set(sub.parts)
+                if parts & SKIP_DIR_NAMES:
+                    continue
+                files.append(sub)
+    return files
+
+
+class Linter:
+    """Runs a rule set (default: the full registry) over files."""
+
+    def __init__(self, rules: Optional[Sequence] = None, repo_root: Optional[Path] = None):
+        if rules is None:
+            from .rules import all_rules
+
+            rules = all_rules()
+        self.rules = list(rules)
+        self.repo_root = repo_root or Path.cwd()
+
+    def _relpath(self, path: Path) -> str:
+        try:
+            return path.resolve().relative_to(self.repo_root.resolve()).as_posix()
+        except ValueError:
+            return path.as_posix()
+
+    def lint_source(self, source: str, path: str) -> List[Finding]:
+        """Lint one module given as text (fixture tests use this directly)."""
+        try:
+            ctx = ModuleContext(path, source)
+        except SyntaxError as exc:
+            return [
+                Finding(
+                    rule="RL000",
+                    path=path,
+                    line=exc.lineno or 1,
+                    col=exc.offset or 0,
+                    message=f"could not parse file: {exc.msg}",
+                    snippet="",
+                )
+            ]
+        raw: List[Finding] = []
+        for rule in self.rules:
+            raw.extend(rule.check(ctx))
+
+        suppressions = parse_suppressions(ctx.source_lines)
+        kept: List[Finding] = []
+        for finding in sorted(raw, key=lambda f: (f.line, f.col, f.rule)):
+            directive = suppressions.get(finding.line)
+            if directive and finding.rule in directive.rules:
+                directive.used = True
+                if directive.justified:
+                    continue
+                kept.append(
+                    dataclasses.replace(
+                        finding,
+                        rule="RL000",
+                        message=(
+                            f"suppression of {finding.rule} lacks a "
+                            "justification: write `# reprolint: "
+                            f"disable={finding.rule} -- <why>`"
+                        ),
+                    )
+                )
+                continue
+            kept.append(finding)
+        for lineno, directive in suppressions.items():
+            if not directive.used:
+                snippet = (
+                    ctx.source_lines[lineno - 1].strip()
+                    if lineno <= len(ctx.source_lines)
+                    else ""
+                )
+                kept.append(
+                    Finding(
+                        rule="RL000",
+                        path=path,
+                        line=lineno,
+                        col=0,
+                        message=(
+                            "unused suppression "
+                            f"(disable={','.join(directive.rules)}): nothing "
+                            "to suppress here — delete it"
+                        ),
+                        snippet=snippet,
+                    )
+                )
+        return sorted(kept, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+    def lint_file(self, path: Path) -> List[Finding]:
+        return self.lint_source(path.read_text(), self._relpath(path))
+
+    def lint_paths(self, paths: Iterable[Path]) -> Tuple[List[Finding], int]:
+        findings: List[Finding] = []
+        files = collect_files([Path(p) for p in paths])
+        for f in files:
+            findings.extend(self.lint_file(f))
+        return findings, len(files)
+
+
+# ------------------------------------------------------------------ baseline
+def load_baseline(path: Path) -> Dict[str, Dict[str, object]]:
+    doc = json.loads(path.read_text())
+    if doc.get("version") != 1:
+        raise ValueError(f"{path}: unsupported baseline version {doc.get('version')!r}")
+    return {entry["fingerprint"]: entry for entry in doc.get("entries", [])}
+
+
+def write_baseline(path: Path, findings: Sequence[Finding]) -> None:
+    entries = [
+        {
+            "fingerprint": f.fingerprint,
+            "rule": f.rule,
+            "path": f.path,
+            "snippet": f.snippet,
+        }
+        for f in findings
+    ]
+    path.write_text(json.dumps({"version": 1, "entries": entries}, indent=2) + "\n")
+
+
+def apply_baseline(
+    findings: Sequence[Finding], baseline: Dict[str, Dict[str, object]]
+) -> Tuple[List[Finding], List[Dict[str, object]]]:
+    """(non-baselined findings, stale baseline entries)."""
+    seen: set = set()
+    kept: List[Finding] = []
+    for f in findings:
+        if f.fingerprint in baseline:
+            seen.add(f.fingerprint)
+        else:
+            kept.append(f)
+    stale = [entry for fp, entry in baseline.items() if fp not in seen]
+    return kept, stale

@@ -1,0 +1,136 @@
+"""The machine-readable layer map: loading, queries, and doc generation.
+
+``layers.toml`` is the single source of truth.  RL005 asks :class:`LayerMap`
+whether an import goes *upward*; ``--sync-layer-docs`` renders the same data
+into the ``docs/architecture.md`` section between the markers below so the
+prose can never drift from the enforced rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from . import toml_compat
+
+DEFAULT_LAYERS_FILE = Path(__file__).resolve().parent / "layers.toml"
+
+DOC_BEGIN = "<!-- reprolint:layers:begin -->"
+DOC_END = "<!-- reprolint:layers:end -->"
+
+
+@dataclasses.dataclass(frozen=True)
+class Layer:
+    name: str
+    rank: int
+    packages: tuple
+    description: str
+
+
+class LayerMap:
+    """Ordered layers over the first-level packages of ``repro``."""
+
+    def __init__(self, layers: List[Layer], root_package: str = "repro"):
+        self.layers = layers
+        self.root_package = root_package
+        self._rank_of_pkg: Dict[str, int] = {}
+        self._layer_of_pkg: Dict[str, Layer] = {}
+        for layer in layers:
+            for pkg in layer.packages:
+                if pkg in self._rank_of_pkg:
+                    raise ValueError(f"package {pkg!r} appears in two layers")
+                self._rank_of_pkg[pkg] = layer.rank
+                self._layer_of_pkg[pkg] = layer
+
+    @classmethod
+    def load(cls, path: Optional[Path] = None) -> "LayerMap":
+        path = Path(path) if path is not None else DEFAULT_LAYERS_FILE
+        doc = toml_compat.loads(path.read_text())
+        raw = doc.get("layers")
+        if not raw:
+            raise ValueError(f"{path}: no [[layers]] entries")
+        layers = [
+            Layer(
+                name=entry["name"],
+                rank=rank,
+                packages=tuple(entry["packages"]),
+                description=entry.get("description", ""),
+            )
+            for rank, entry in enumerate(raw)
+        ]
+        return cls(layers)
+
+    def package_of_module(self, module: str) -> Optional[str]:
+        """``repro.sched.quantize`` -> ``sched``; non-repro modules -> None."""
+        parts = module.split(".")
+        if parts[0] != self.root_package or len(parts) < 2:
+            return None
+        return parts[1]
+
+    def rank(self, package: str) -> Optional[int]:
+        return self._rank_of_pkg.get(package)
+
+    def layer(self, package: str) -> Optional[Layer]:
+        return self._layer_of_pkg.get(package)
+
+    def violation(self, importer_module: str, imported_module: str) -> Optional[str]:
+        """Message when ``importer_module`` imports ``imported_module`` upward."""
+        src_pkg = self.package_of_module(importer_module)
+        dst_pkg = self.package_of_module(imported_module)
+        if src_pkg is None or dst_pkg is None:
+            return None
+        src_rank, dst_rank = self.rank(src_pkg), self.rank(dst_pkg)
+        if src_rank is None or dst_rank is None or dst_rank <= src_rank:
+            return None
+        src_layer, dst_layer = self.layer(src_pkg), self.layer(dst_pkg)
+        return (
+            f"upward import: {self.root_package}.{src_pkg} "
+            f"(layer '{src_layer.name}') must not import {imported_module} "
+            f"(layer '{dst_layer.name}'); move the dependency down, invert it, "
+            f"or defer the import into the using function"
+        )
+
+    # -------------------------------------------------------------- doc sync
+    def render_doc_section(self) -> str:
+        """The generated architecture.md block (markers included)."""
+        lines = [
+            DOC_BEGIN,
+            "*Generated from [`tools/reprolint/layers.toml`]"
+            "(../tools/reprolint/layers.toml) by `python -m tools.reprolint "
+            "--sync-layer-docs` — edit the TOML, not this table.  Rule RL005 "
+            "rejects any module-level import that targets a higher layer; "
+            "deferred in-function imports are the sanctioned escape hatch for "
+            "acyclic back-references.*",
+            "",
+            "| rank | layer | packages | may import |",
+            "|------|-------|----------|------------|",
+        ]
+        for layer in self.layers:
+            below = [l.name for l in self.layers if l.rank < layer.rank]
+            allowed = ", ".join(reversed(below)) if below else "(nothing)"
+            pkgs = ", ".join(f"`repro.{p}`" for p in layer.packages)
+            lines.append(
+                f"| {layer.rank} | {layer.name} | {pkgs} | "
+                f"{layer.name} (same layer), {allowed} |"
+                if below
+                else f"| {layer.rank} | {layer.name} | {pkgs} | {layer.name} (same layer) |"
+            )
+        lines.append(DOC_END)
+        return "\n".join(lines)
+
+    def sync_doc(self, doc_path: Path, write: bool) -> bool:
+        """True when the doc section already matches (or was rewritten)."""
+        text = doc_path.read_text()
+        begin, end = text.find(DOC_BEGIN), text.find(DOC_END)
+        if begin == -1 or end == -1 or end < begin:
+            raise ValueError(
+                f"{doc_path}: missing {DOC_BEGIN} / {DOC_END} markers"
+            )
+        current = text[begin : end + len(DOC_END)]
+        rendered = self.render_doc_section()
+        if current == rendered:
+            return True
+        if write:
+            doc_path.write_text(text[:begin] + rendered + text[end + len(DOC_END) :])
+            return True
+        return False

@@ -1,0 +1,63 @@
+"""Rule registry.  Each rule is one module exporting a single Rule subclass;
+``all_rules()`` instantiates the full set in id order.
+
+Adding a rule (see docs/static-analysis.md for the worked example):
+
+  1. create ``rlNNN_short_name.py`` with a class deriving :class:`Rule`,
+     setting ``id``/``title`` and implementing ``check(ctx)``;
+  2. register it in ``_RULE_MODULES`` below;
+  3. add at least one true-positive and one false-positive fixture under
+     ``tools/reprolint/testdata/<rlNNN>/`` — ``tests/test_reprolint.py``
+     discovers them by directory name and fails if either is missing.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from ..context import ModuleContext
+from ..engine import Finding
+
+_RULE_MODULES = (
+    "rl001_host_sync",
+    "rl002_vmap_pallas",
+    "rl003_cond_structure",
+    "rl004_donated_reuse",
+    "rl005_layering",
+    "rl006_key_reuse",
+    "rl007_traced_branch",
+)
+
+
+class Rule:
+    """Base class: one invariant, one visitor over a shared ModuleContext."""
+
+    id: str = "RL000"
+    title: str = ""
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, ctx: ModuleContext, node, message: str) -> Finding:
+        return Finding(
+            rule=self.id,
+            path=ctx.path,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0),
+            message=message,
+            snippet=ctx.line(node),
+        )
+
+
+def all_rules() -> List[Rule]:
+    rules: List[Rule] = []
+    for module_name in _RULE_MODULES:
+        module = importlib.import_module(f".{module_name}", __package__)
+        classes = [
+            obj
+            for obj in vars(module).values()
+            if isinstance(obj, type) and issubclass(obj, Rule) and obj is not Rule
+        ]
+        assert len(classes) == 1, f"{module_name}: expected exactly one Rule class"
+        rules.append(classes[0]())
+    return sorted(rules, key=lambda r: r.id)

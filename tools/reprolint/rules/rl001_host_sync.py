@@ -1,0 +1,80 @@
+"""RL001 — host synchronization inside traced code.
+
+``float(x)`` / ``int(x)`` / ``bool(x)`` / ``x.item()`` / ``np.asarray(x)``
+applied to a value that flows from a traced parameter forces a device->host
+readout: under ``jit`` it raises ``TracerConversionError`` at best, and on
+the async-dispatch serve path it silently serializes the pipeline.  PR 4
+shipped exactly this bug — ``gibbs.fit`` called ``float(mu_guess)`` on a
+traced mean and broke under ``jit``/``vmap``.
+
+Clean alternatives: keep the value as a 0-d array (``jnp.asarray``), or do
+the readout in the imperative shell after the jitted call returns.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence, Tuple
+
+from ..context import ModuleContext
+from ..engine import Finding
+from . import Rule
+
+_BUILTIN_CASTS = {"float", "int", "bool", "complex"}
+_NUMPY_SINKS = {"asarray", "array", "float64", "float32", "int64", "int32", "bool_"}
+_METHOD_SINKS = {"item", "tolist"}
+
+
+class HostSyncInTracedCode(Rule):
+    id = "RL001"
+    title = "host sync (float()/.item()/np.asarray) on a traced value"
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for info in ctx.traced_functions():
+            tainted = ctx.tainted_names(info)
+            if not tainted:
+                continue
+            for node in ctx._walk_own_body(info):
+                if not isinstance(node, ast.Call):
+                    continue
+                sink = self._sink(ctx, node)
+                if sink is None:
+                    continue
+                label, operands = sink
+                if any(ctx.expression_tainted(a, tainted) for a in operands):
+                    findings.append(
+                        self.finding(
+                            ctx,
+                            node,
+                            f"{label} forces a host sync on a traced value "
+                            f"inside `{info.name}` ({info.traced_reason}); "
+                            "keep it on device (jnp.asarray) or read it out "
+                            "after the jitted call returns",
+                        )
+                    )
+        return findings
+
+    @staticmethod
+    def _sink(
+        ctx: ModuleContext, call: ast.Call
+    ) -> Optional[Tuple[str, Sequence[ast.expr]]]:
+        """(sink label, expressions whose taint makes it a violation)."""
+        func = call.func
+        if (
+            isinstance(func, ast.Name)
+            and func.id in _BUILTIN_CASTS
+            and ctx.aliases.get(func.id, func.id) == func.id  # not shadowed
+            and len(call.args) == 1
+        ):
+            return f"{func.id}()", call.args
+        if isinstance(func, ast.Attribute):
+            if func.attr in _METHOD_SINKS and not call.args:
+                return f".{func.attr}()", [func.value]
+            resolved = ctx.resolve(func)
+            if (
+                resolved
+                and resolved.startswith("numpy.")
+                and resolved.rsplit(".", 1)[-1] in _NUMPY_SINKS
+            ):
+                return resolved, call.args
+        return None

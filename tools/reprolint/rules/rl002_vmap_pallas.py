@@ -1,0 +1,82 @@
+"""RL002 — ``vmap`` over a function that launches a Pallas kernel.
+
+``jax.vmap`` of a ``pallas_call`` lowers to one kernel launch per batch
+element (or fails outright on some backends) instead of one fused launch —
+the repo's standing rule since PR 3 is "never vmap-of-pallas_call": fold the
+batch axis into the kernel grid instead (``ops.posterior_grid_fleet`` reshapes
+stacked leading axes for exactly this reason; the DAG path folds S into K).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from ..context import FunctionInfo, ModuleContext
+from ..engine import Finding
+from . import Rule
+
+_VMAP_NAMES = {"jax.vmap", "vmap"}
+_PALLAS_CALL = "pallas_call"
+
+
+class VmapOfPallasCall(Rule):
+    id = "RL002"
+    title = "vmap applied to a function containing pallas_call"
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = ctx.resolve_call(node)
+            if resolved not in _VMAP_NAMES or not node.args:
+                continue
+            target = node.args[0]
+            reason = self._launches_pallas(ctx, target, seen=set())
+            if reason:
+                findings.append(
+                    self.finding(
+                        ctx,
+                        node,
+                        f"vmap over {reason}: this lowers to one kernel launch "
+                        "per batch element — fold the batch axis into the "
+                        "kernel grid instead (see ops.posterior_grid_fleet)",
+                    )
+                )
+        return findings
+
+    def _launches_pallas(
+        self, ctx: ModuleContext, target: ast.AST, seen: Set[int]
+    ) -> Optional[str]:
+        """Human-readable reason when ``target`` (transitively) hits pallas."""
+        if isinstance(target, ast.Call):
+            resolved = ctx.resolve_call(target)
+            if resolved and resolved.rsplit(".", 1)[-1] == _PALLAS_CALL:
+                return "a pallas_call(...) result"
+        info = ctx.local_function(target)
+        if info is not None:
+            return self._body_launches_pallas(ctx, info, seen)
+        return None
+
+    def _body_launches_pallas(
+        self, ctx: ModuleContext, info: FunctionInfo, seen: Set[int]
+    ) -> Optional[str]:
+        if id(info) in seen:
+            return None
+        seen.add(id(info))
+        for node in ctx._walk_own_body(info):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = ctx.resolve_call(node)
+            if resolved and resolved.rsplit(".", 1)[-1] == _PALLAS_CALL:
+                return f"`{info.name}`, which calls pallas_call"
+            if isinstance(node.func, ast.Name):
+                callee = ctx.local_function(node.func)
+                if callee is not None:
+                    nested = self._body_launches_pallas(ctx, callee, seen)
+                    if nested:
+                        return (
+                            f"`{info.name}`, which reaches pallas_call via "
+                            f"`{callee.name}`"
+                        )
+        return None

@@ -1,0 +1,186 @@
+"""RL003 — ``lax.cond``/``lax.switch`` branches that disagree structurally.
+
+Both branches of a traced conditional must return pytrees with identical
+structure, shapes and dtypes; a mismatch is a trace-time error at best and a
+silent weak-type promotion at worst.  PR 7 shipped this bug: the hyperprior
+serve-tick refit branch produced float32 scalars while the hold branch
+carried the python-float init — the fix canonicalized the init to float32.
+
+The rule compares *literal* return skeletons (tuple arity, constructor
+dtypes/shapes, int-vs-float python scalars).  Anything it cannot prove is a
+wildcard, so computed returns never false-flag.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from ..context import ModuleContext
+from ..engine import Finding
+from . import Rule
+
+_COND_NAMES = {"jax.lax.cond", "lax.cond", "cond"}
+_SWITCH_NAMES = {"jax.lax.switch", "lax.switch", "switch"}
+
+_DTYPES = {
+    "float16", "bfloat16", "float32", "float64",
+    "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_",
+}
+# constructor name -> (dtype positional index, has float default)
+_CONSTRUCTORS = {
+    "zeros": (1, True),
+    "ones": (1, True),
+    "empty": (1, True),
+    "full": (2, True),
+    "asarray": (1, False),
+    "array": (1, False),
+    "zeros_like": (None, False),
+    "ones_like": (None, False),
+    "full_like": (None, False),
+}
+
+ANY = ("any",)
+
+
+class CondBranchStructureMismatch(Rule):
+    id = "RL003"
+    title = "lax.cond/switch branches return structurally different literals"
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = ctx.resolve_call(node)
+            if resolved in _COND_NAMES and len(node.args) >= 3:
+                branches = [node.args[1], node.args[2]]
+            elif resolved in _SWITCH_NAMES and len(node.args) >= 2 and isinstance(
+                node.args[1], (ast.List, ast.Tuple)
+            ):
+                branches = list(node.args[1].elts)
+            else:
+                continue
+            skeletons = [self._branch_skeleton(ctx, b) for b in branches]
+            for i in range(len(skeletons)):
+                for j in range(i + 1, len(skeletons)):
+                    why = _mismatch(skeletons[i], skeletons[j])
+                    if why:
+                        findings.append(
+                            self.finding(
+                                ctx,
+                                node,
+                                f"branches {i} and {j} return structurally "
+                                f"different pytrees ({why}); all branches "
+                                "must agree in treedef, shape and dtype",
+                            )
+                        )
+                        break
+                else:
+                    continue
+                break
+        return findings
+
+    # ---------------------------------------------------------- skeletons
+    def _branch_skeleton(self, ctx: ModuleContext, branch: ast.AST, depth: int = 0):
+        if depth > 4:
+            return ANY
+        info = ctx.local_function(branch)
+        if info is not None:
+            if isinstance(info.node, ast.Lambda):
+                return self._expr_skeleton(ctx, info.node.body, depth)
+            for node in ctx._walk_own_body(info):
+                if isinstance(node, ast.Return) and node.value is not None:
+                    skel = self._expr_skeleton(ctx, node.value, depth)
+                    if skel != ANY:
+                        return skel
+        return ANY
+
+    def _expr_skeleton(self, ctx: ModuleContext, expr: ast.AST, depth: int):
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            return (
+                "tuple",
+                tuple(self._expr_skeleton(ctx, e, depth) for e in expr.elts),
+            )
+        if isinstance(expr, ast.Constant):
+            if isinstance(expr.value, bool):
+                return ANY
+            if isinstance(expr.value, int):
+                return ("pyint",)
+            if isinstance(expr.value, float):
+                return ("pyfloat",)
+            return ANY
+        if isinstance(expr, ast.Call):
+            resolved = ctx.resolve_call(expr)
+            if resolved is not None:
+                tail = resolved.rsplit(".", 1)[-1]
+                if tail in _CONSTRUCTORS:
+                    return self._constructor_leaf(ctx, expr, tail)
+                if tail in _DTYPES:
+                    return ("array", tail, None)
+            # A branch that just forwards to a local helper: use its returns.
+            callee = ctx.local_function(expr.func)
+            if callee is not None:
+                return self._branch_skeleton(ctx, expr.func, depth + 1)
+        return ANY
+
+    def _constructor_leaf(self, ctx: ModuleContext, call: ast.Call, name: str):
+        dtype_pos, has_default = _CONSTRUCTORS[name]
+        dtype: Optional[str] = "float32" if has_default else None
+        dtype_node: Optional[ast.AST] = None
+        if dtype_pos is not None and len(call.args) > dtype_pos:
+            dtype_node = call.args[dtype_pos]
+        for kw in call.keywords:
+            if kw.arg == "dtype":
+                dtype_node = kw.value
+        if dtype_node is not None:
+            resolved = ctx.resolve(dtype_node)
+            label = resolved.rsplit(".", 1)[-1] if resolved else None
+            if label is None and isinstance(dtype_node, ast.Constant):
+                label = str(dtype_node.value)
+            if label in _DTYPES or (label and label.rstrip("_") in _DTYPES):
+                dtype = label.rstrip("_") if label != "bool_" else label
+            else:
+                dtype = None  # computed dtype: unknown, matches anything
+        shape = self._literal_shape(call, name)
+        return ("array", dtype, shape)
+
+    @staticmethod
+    def _literal_shape(call: ast.Call, name: str) -> Optional[Tuple]:
+        if name in ("zeros", "ones", "empty", "full") and call.args:
+            node = call.args[0]
+            if isinstance(node, ast.Constant) and isinstance(node.value, int):
+                return (node.value,)
+            if isinstance(node, ast.Tuple) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in node.elts
+            ):
+                return tuple(e.value for e in node.elts)
+        return None
+
+
+def _mismatch(a, b) -> Optional[str]:
+    """Reason the two skeletons cannot carry equal avals, or None."""
+    if a == ANY or b == ANY:
+        return None
+    if a[0] == "tuple" and b[0] == "tuple":
+        if len(a[1]) != len(b[1]):
+            return f"tuple arity {len(a[1])} vs {len(b[1])}"
+        for child_a, child_b in zip(a[1], b[1]):
+            why = _mismatch(child_a, child_b)
+            if why:
+                return why
+        return None
+    if a[0] == "tuple" or b[0] == "tuple":
+        return "tuple vs scalar leaf"
+    if a[0] == "array" and b[0] == "array":
+        dtype_a, shape_a = a[1], a[2]
+        dtype_b, shape_b = b[1], b[2]
+        if dtype_a and dtype_b and dtype_a != dtype_b:
+            return f"dtype {dtype_a} vs {dtype_b}"
+        if shape_a and shape_b and shape_a != shape_b:
+            return f"shape {shape_a} vs {shape_b}"
+        return None
+    if {a[0], b[0]} == {"pyint", "pyfloat"}:
+        return "python int vs float literal (weak-dtype mismatch)"
+    return None

@@ -1,0 +1,141 @@
+"""RL004 — reading a buffer after donating it to a jitted call.
+
+``jit(..., donate_argnums=...)`` hands the argument's device buffer to the
+callee; the caller's reference is dead the moment the call dispatches, and
+touching it afterwards raises "Array has been deleted" — but only at runtime,
+only on backends that actually reuse the buffer, which is why the serve
+tick's donated path (PR 6) pins this with a live-arrays regression test.
+
+The rule tracks, per enclosing function, names passed in donated positions
+and flags any later read before rebinding.  The idiomatic
+``state = tick(state)`` rebinds and is clean.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from ..context import ModuleContext, resolve_static_fields
+from ..engine import Finding
+from . import Rule
+
+_JIT_NAMES = {"jax.jit", "jit", "jax.pmap", "pmap"}
+
+
+def _donated_positions(call: ast.Call) -> Set[int]:
+    out: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(node.value, int):
+                    out.add(node.value)
+    return out
+
+
+class DonatedBufferReuse(Rule):
+    id = "RL004"
+    title = "donated buffer read after a donate_argnums jitted call"
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        # 1. jitted callables with donation: `g = jax.jit(f, donate_argnums=...)`
+        #    and `@partial(jax.jit, donate_argnums=...)` defs.
+        donating: Dict[str, Set[int]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                resolved = ctx.resolve_call(node.value)
+                if resolved in _JIT_NAMES:
+                    positions = _donated_positions(node.value)
+                    if positions:
+                        for target in node.targets:
+                            if isinstance(target, ast.Name):
+                                donating[target.id] = positions
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for deco in node.decorator_list:
+                    if isinstance(deco, ast.Call):
+                        head = ctx.resolve(deco.func)
+                        inner = (
+                            ctx.resolve(deco.args[0])
+                            if head in ("functools.partial", "partial") and deco.args
+                            else head
+                        )
+                        if inner in _JIT_NAMES:
+                            positions = _donated_positions(deco)
+                            if positions:
+                                donating[node.name] = positions
+        if not donating:
+            return []
+
+        findings: List[Finding] = []
+        scopes = [info.body_statements() for info in ctx.functions] + [ctx.tree.body]
+        for body in scopes:
+            findings.extend(self._check_scope(ctx, body, donating))
+        return findings
+
+    def _check_scope(self, ctx, body, donating: Dict[str, Set[int]]) -> List[Finding]:
+        dead: Dict[str, Tuple[str, int]] = {}  # name -> (callee, donation line)
+        findings: List[Finding] = []
+        simple = (ast.Assign, ast.AugAssign, ast.AnnAssign, ast.Expr,
+                  ast.Return, ast.Raise, ast.Assert, ast.Delete)
+
+        def rebind(target: ast.AST):
+            for node in ast.walk(target):
+                if isinstance(node, ast.Name):
+                    dead.pop(node.id, None)
+
+        def scan_reads(expr: ast.AST):
+            for node in ast.walk(expr):
+                if (
+                    isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Load)
+                    and node.id in dead
+                ):
+                    callee, line = dead[node.id]
+                    findings.append(
+                        self.finding(
+                            ctx,
+                            node,
+                            f"`{node.id}` was donated to `{callee}` on line "
+                            f"{line} (donate_argnums); its buffer may already "
+                            "be reused — rebind the result or copy before "
+                            "donating",
+                        )
+                    )
+                    dead.pop(node.id, None)  # report once
+
+        def mark_donations(stmt: ast.AST):
+            for call in ast.walk(stmt):
+                if (
+                    isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Name)
+                    and call.func.id in donating
+                ):
+                    for pos in donating[call.func.id]:
+                        if pos < len(call.args) and isinstance(call.args[pos], ast.Name):
+                            dead[call.args[pos].id] = (call.func.id, call.lineno)
+
+        def visit_stmt(stmt: ast.stmt):
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                return
+            if isinstance(stmt, simple):
+                scan_reads(stmt)  # reads evaluate before the call donates
+                mark_donations(stmt)
+                if isinstance(stmt, ast.Assign):
+                    for target in stmt.targets:
+                        rebind(target)
+                elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                    rebind(stmt.target)
+                return
+            # Compound statement: header expressions first, then the bodies.
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    scan_reads(child)
+                    mark_donations(child)
+            if isinstance(stmt, ast.For):
+                rebind(stmt.target)
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.stmt):
+                    visit_stmt(child)
+
+        for stmt in body:
+            visit_stmt(stmt)
+        return findings

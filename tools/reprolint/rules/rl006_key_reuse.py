@@ -1,0 +1,111 @@
+"""RL006 — PRNG key consumed twice without an intervening split.
+
+JAX keys are not stateful seeds: passing the same key to two
+``jax.random.*`` draws yields *identical* (or worse, silently correlated)
+randomness.  The estimator's correctness claims lean on stream coherence —
+``gibbs_batch`` reproduces the legacy per-worker chains bitwise precisely
+because every consumer gets its own ``split`` product, and PR 8's
+active/inactive alternation keeps the ``_split5`` stream aligned for the
+same reason.
+
+A variable is "consumed" when it appears as the first positional argument of
+a ``jax.random.*`` call (``split``/``fold_in`` included — their results must
+be rebound).  Rebinding the name resets the count, so the loop-carried
+``key, sub = jax.random.split(key)`` idiom is clean.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from ..context import FunctionInfo, ModuleContext
+from ..engine import Finding
+from . import Rule
+
+
+class PrngKeyReuse(Rule):
+    id = "RL006"
+    title = "PRNG key consumed twice without an intervening split"
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        scopes: List = [info for info in ctx.functions]
+        for info in scopes:
+            findings.extend(self._check_body(ctx, info))
+        findings.extend(self._check_statements(ctx, ctx.tree.body))
+        return findings
+
+    def _check_body(self, ctx: ModuleContext, info: FunctionInfo) -> List[Finding]:
+        return self._check_statements(ctx, list(info.body_statements()))
+
+    def _check_statements(self, ctx: ModuleContext, body: List[ast.stmt]) -> List[Finding]:
+        findings: List[Finding] = []
+        consumed: Dict[str, int] = {}  # key name -> line of first consumption
+
+        def rebind(target: ast.AST):
+            for node in ast.walk(target):
+                if isinstance(node, ast.Name):
+                    consumed.pop(node.id, None)
+
+        def is_random_call(call: ast.Call) -> bool:
+            resolved = ctx.resolve_call(call)
+            if not resolved:
+                return False
+            if resolved.rsplit(".", 1)[-1] == "fold_in":
+                # fold_in derives independent streams from one key by design;
+                # reusing the key with different data is the intended pattern.
+                return False
+            return resolved.startswith("jax.random.") or resolved.startswith(
+                "random."  # `from jax import random`
+            )
+
+        def consume_in(node: ast.AST):
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                    continue  # nested scopes are checked on their own
+                if not (isinstance(sub, ast.Call) and is_random_call(sub)):
+                    continue
+                if not sub.args or not isinstance(sub.args[0], ast.Name):
+                    continue
+                name = sub.args[0].id
+                if name in consumed:
+                    findings.append(
+                        self.finding(
+                            ctx,
+                            sub,
+                            f"key `{name}` was already consumed on line "
+                            f"{consumed[name]} — draws from a reused key are "
+                            "identical; split first "
+                            "(`key, sub = jax.random.split(key)`)",
+                        )
+                    )
+                else:
+                    consumed[name] = sub.lineno
+
+        simple = (ast.Assign, ast.AugAssign, ast.AnnAssign, ast.Expr,
+                  ast.Return, ast.Raise, ast.Assert)
+
+        def visit(stmt: ast.stmt):
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                return  # nested scopes are checked on their own
+            if isinstance(stmt, simple):
+                consume_in(stmt)
+                if isinstance(stmt, ast.Assign):
+                    for target in stmt.targets:
+                        rebind(target)
+                elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                    rebind(stmt.target)
+                return
+            # Compound statement: header expressions, then the bodies.
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    consume_in(child)
+            if isinstance(stmt, ast.For):
+                rebind(stmt.target)
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.stmt):
+                    visit(child)
+
+        for stmt in body:
+            visit(stmt)
+        return findings

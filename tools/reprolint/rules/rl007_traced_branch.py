@@ -1,0 +1,49 @@
+"""RL007 — Python ``if``/``while`` on a traced value.
+
+Inside a traced function, ``if x > 0:`` calls ``bool()`` on a tracer — a
+``TracerBoolConversionError`` under ``jit``, or, when the value happens to be
+concrete (interpret mode, eager debugging), a silent *retrace per branch
+direction* that bakes data into the compiled program.  Use ``lax.cond`` /
+``lax.select`` / ``jnp.where`` instead.
+
+Static branches stay legal and un-flagged: ``if mask is None:``,
+``if x.ndim == 2:``, ``if config.use_pallas:`` (jit-static argument or
+closure) — the taint analysis prunes structural reads and static params, so
+the shape-polymorphic dispatch idiom the repo uses everywhere is clean.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..context import ModuleContext
+from ..engine import Finding
+from . import Rule
+
+
+class TracedValueBranch(Rule):
+    id = "RL007"
+    title = "Python if/while branches on a traced value"
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for info in ctx.traced_functions():
+            tainted = ctx.tainted_names(info)
+            if not tainted:
+                continue
+            for node in ctx._walk_own_body(info):
+                if not isinstance(node, (ast.If, ast.While)):
+                    continue
+                if ctx.expression_tainted(node.test, tainted):
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    findings.append(
+                        self.finding(
+                            ctx,
+                            node,
+                            f"`{kind}` branches on a traced value inside "
+                            f"`{info.name}` ({info.traced_reason}) — "
+                            "TracerBoolConversionError under jit; use "
+                            "lax.cond / lax.select / jnp.where",
+                        )
+                    )
+        return findings

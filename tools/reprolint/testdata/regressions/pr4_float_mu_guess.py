@@ -1,0 +1,29 @@
+"""Historical bug (PR 4): ``gibbs.fit`` called ``float(mu_guess)`` on a
+traced mean, raising TracerConversionError the moment ``fit`` ran under
+``jit``/``vmap``.  The shipped fix keeps the guess as a traced 0-d array
+(see ``src/repro/core/gibbs.py``, "Keep the guess as a traced array").
+
+This fixture reproduces the pre-fix shape of the code; reprolint must flag
+it (RL001) so the bug class cannot ship again.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def _init_state(key, mu_guess):
+    return {"mu": jnp.asarray(mu_guess), "key": key}
+
+
+def fit(key, f, t, mu_guess=None):
+    if mu_guess is None:
+        mu_guess = jnp.mean(t) / jnp.maximum(jnp.mean(f), 1e-6)
+    # RL001: the pre-PR4 bug — float() forces a host sync on the traced mean.
+    state = _init_state(key, float(mu_guess))
+    return state
+
+
+@jax.jit
+def refit_fleet(keys, f, t):
+    # Per-chain refit exactly as PR 4 shipped it: fit runs under jit+vmap,
+    # so f/t/mu_guess are tracers when float() fires.
+    return jax.vmap(lambda k: fit(k, f, t))(keys)

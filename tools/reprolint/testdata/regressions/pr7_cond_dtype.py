@@ -1,0 +1,27 @@
+"""Historical bug (PR 7): the hyperprior serve-tick refit ran under
+``lax.cond``, but the refit branch produced float32 scalars while the hold
+branch returned the weakly-typed python-float init — structurally different
+pytrees, a trace-time error the moment the cadence first fired.  The shipped
+fix canonicalizes the init hyperprior to float32 so both branches agree
+(see ``src/repro/serve/service.py``, "canonical float32 so both lax.cond
+refit branches agree").
+
+This fixture reproduces the pre-fix shape of the code; reprolint must flag
+it (RL003) so the bug class cannot ship again.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def _refit(stats):
+    pooled = jnp.mean(stats)
+    return (jnp.asarray(pooled, jnp.float32), jnp.zeros((), jnp.float32))
+
+
+def tick(do_refit, stats):
+    return jax.lax.cond(
+        do_refit,
+        lambda s: (jnp.asarray(1.0, jnp.float64), jnp.zeros((), jnp.float64)),
+        lambda s: _refit(s),  # RL003: float64 hold branch vs float32 refit
+        stats,
+    )

@@ -1,0 +1,26 @@
+"""False-positive guards: casts that are static or outside the trace."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from functools import partial
+
+
+@jax.jit
+def static_metadata(x):
+    n = int(x.shape[0])  # clean: shape is static metadata, not a tracer
+    return x / float(n)  # clean: n is a python int
+
+
+@partial(jax.jit, static_argnames=("scale",))
+def static_arg(x, scale):
+    return x * float(scale)  # clean: scale is jit-static
+
+
+def host_shell(xs):
+    total = jax.jit(jnp.sum)(xs)
+    return float(total)  # clean: the readout happens outside the trace
+
+
+def eager_helper(values):
+    arr = np.asarray(values)  # clean: this function is never traced
+    return bool(arr.any())

@@ -1,0 +1,25 @@
+"""True positive: host-sync casts on traced values inside jitted code."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_cast(x):
+    scale = float(jnp.mean(x))  # RL001: float() on a traced mean
+    return x * scale
+
+
+def bad_scan(carry, t):
+    total = carry + t.item()  # RL001: .item() inside a scan body
+    return total, total
+
+
+def run(ts):
+    return jax.lax.scan(bad_scan, 0.0, ts)
+
+
+@jax.jit
+def bad_numpy(x):
+    host = np.asarray(x)  # RL001: np.asarray pulls the tracer to host
+    return jnp.asarray(host.sum())

@@ -1,0 +1,25 @@
+"""False-positive guards: vmap of plain jnp code; pallas batched via grid."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def fleet_native(xs):
+    # Clean: the batch axis rides the pallas grid, not vmap.
+    return pl.pallas_call(_kernel, out_shape=xs, grid=(xs.shape[0],))(xs)
+
+
+def vmapped_math(xs):
+    # Clean: vmap over pure jnp code is the intended use.
+    return jax.vmap(lambda x: jnp.tanh(x) * 2.0)(xs)
+
+
+def vmapped_helper(xs):
+    def body(x):
+        return jnp.sum(x**2)
+
+    return jax.vmap(body)(xs)

@@ -1,0 +1,22 @@
+"""True positive: vmap over a pallas_call launcher."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def single_unit(x):
+    return pl.pallas_call(_kernel, out_shape=x)(x)
+
+
+def fleet(xs):
+    return jax.vmap(single_unit)(xs)  # RL002: one launch per batch element
+
+
+def fleet_indirect(xs):
+    def wrapper(x):
+        return single_unit(x)
+
+    return jax.vmap(wrapper)(xs)  # RL002: reaches pallas_call via wrapper

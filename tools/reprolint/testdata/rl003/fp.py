@@ -1,0 +1,34 @@
+"""False-positive guards: agreeing branches, and computed returns."""
+import jax
+import jax.numpy as jnp
+
+
+def agreeing_literals(pred, x):
+    # Clean: explicit float32 and the float32 default are the same aval.
+    return jax.lax.cond(
+        pred,
+        lambda v: (v, jnp.zeros((), jnp.float32)),
+        lambda v: (v, jnp.zeros(())),
+        x,
+    )
+
+
+def _advance(state):
+    return jax.tree_util.tree_map(lambda l: l * 2.0, state)
+
+
+def computed_branches(pred, state):
+    # Clean: both branches return computed pytrees the rule cannot (and must
+    # not pretend to) prove anything about.
+    return jax.lax.cond(pred, _advance, lambda s: s, state)
+
+
+def same_shapes(i, x):
+    return jax.lax.switch(
+        i,
+        [
+            lambda v: jnp.ones((4,), jnp.float32),
+            lambda v: jnp.zeros((4,), jnp.float32),
+        ],
+        x,
+    )

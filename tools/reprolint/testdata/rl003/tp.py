@@ -1,0 +1,41 @@
+"""True positive: cond/switch branches with structurally different returns."""
+import jax
+import jax.numpy as jnp
+
+
+def dtype_mismatch(pred, x):
+    return jax.lax.cond(
+        pred,
+        lambda v: (v, jnp.zeros((), jnp.int32)),
+        lambda v: (v, jnp.zeros(())),  # RL003: int32 vs float32 counter
+        x,
+    )
+
+
+def arity_mismatch(pred, x):
+    return jax.lax.cond(
+        pred,
+        lambda v: (v, v),
+        lambda v: (v, v, v),  # RL003: 2-tuple vs 3-tuple
+        x,
+    )
+
+
+def weak_literal_mismatch(pred, x):
+    return jax.lax.cond(
+        pred,
+        lambda v: (v, 0),
+        lambda v: (v, 0.0),  # RL003: python int vs float literal
+        x,
+    )
+
+
+def switch_mismatch(i, x):
+    return jax.lax.switch(
+        i,
+        [
+            lambda v: jnp.zeros((3,), jnp.float32),
+            lambda v: jnp.zeros((4,), jnp.float32),  # RL003: shape 3 vs 4
+        ],
+        x,
+    )

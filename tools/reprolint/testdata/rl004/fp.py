@@ -1,0 +1,28 @@
+"""False-positive guards: the rebind idiom, and non-donating jits."""
+import jax
+import jax.numpy as jnp
+
+
+def _tick(state, x):
+    return state + x
+
+
+tick = jax.jit(_tick, donate_argnums=(0,))
+plain = jax.jit(_tick)
+
+
+def rebind_idiom(state, xs):
+    for x in xs:
+        state = tick(state, x)  # clean: the donated name is rebound
+    return state
+
+
+def read_before_donation(state, x):
+    checksum = jnp.sum(state)  # clean: read happens before the donating call
+    state = tick(state, x)
+    return state, checksum
+
+
+def non_donating(state, x):
+    out = plain(state, x)
+    return out, state + 1.0  # clean: no donation without donate_argnums

@@ -1,0 +1,28 @@
+"""True positive: reading a buffer after donating it."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _tick(state, x):
+    return state + x
+
+
+tick = jax.jit(_tick, donate_argnums=(0,))
+
+
+def leak_after_donation(state, x):
+    new_state = tick(state, x)
+    stale = state + 1.0  # RL004: `state` was donated to tick
+    return new_state, stale
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def advance(ring, item):
+    return ring.at[0].set(item)
+
+
+def push_twice(ring, a, b):
+    advance(ring, a)
+    return advance(ring, b)  # RL004: `ring` already donated on the line above

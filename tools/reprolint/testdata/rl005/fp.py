@@ -1,0 +1,16 @@
+"""False-positive guards: downward, same-layer, and deferred imports.
+
+Linted under the synthetic path ``src/repro/serve/good_imports.py``.
+"""
+from repro.core.frontier import UnitParams  # clean: serve -> core is downward
+from repro.sched.scheduler import Scheduler  # clean: serve -> sched is downward
+from repro.hier.hyperprior import fit_hyperprior  # clean: serve <-> hier share a layer
+from .ring import TelemetryRing  # clean: same package
+
+
+def lazy_app_hook():
+    # Clean: deferred imports are the sanctioned acyclic escape hatch, even
+    # when they point upward.
+    from repro.train.trainer import Trainer
+
+    return Trainer

@@ -1,0 +1,15 @@
+"""True positive: a `core` module importing upward from `sched`.
+
+The test lints this source under the synthetic path
+``src/repro/core/bad_upward.py`` (RL005 keys on the path, so the fixture
+must be relocated to be meaningful).  This mirrors the live violation this
+rule shipped against: ``repro/core/partitioner.py`` importing ``repro.sched``
+at module level.
+"""
+from repro.sched.scheduler import Scheduler  # RL005: core -> sched is upward
+import repro.serve  # RL005: core -> serve is two layers up
+from ..sched import quantize  # RL005: relative spelling of the same jump
+
+
+def delegate(*args):
+    return Scheduler(*args)

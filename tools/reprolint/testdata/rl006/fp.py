@@ -1,0 +1,25 @@
+"""False-positive guards: the split/rebind idioms."""
+import jax
+
+
+def split_products(key, shape):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, shape)
+    b = jax.random.uniform(k2, shape)  # clean: each product used once
+    return a + b
+
+
+def loop_carried(key, n):
+    total = 0.0
+    for i in range(n):
+        key, sub = jax.random.split(key)  # clean: key rebound every pass
+        total = total + jax.random.normal(sub, ())
+    return total
+
+
+def fold_in_streams(key, ids):
+    # Clean: fold_in derives independent streams from one key by design,
+    # so the repeated `key` argument is not a reuse.
+    a = jax.random.fold_in(key, 0)
+    b = jax.random.fold_in(key, 1)
+    return [a, b] + [jax.random.fold_in(key, i) for i in ids]

@@ -1,0 +1,16 @@
+"""True positive: the same PRNG key consumed twice."""
+import jax
+import jax.numpy as jnp
+
+
+def correlated_draws(key, shape):
+    noise = jax.random.normal(key, shape)
+    jitter = jax.random.uniform(key, shape)  # RL006: key reused, not split
+    return noise + jitter
+
+
+def split_then_reuse_parent(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (3,))
+    b = jax.random.normal(key, (3,))  # RL006: parent key already consumed
+    return a + b + jnp.sum(k2 * 0)

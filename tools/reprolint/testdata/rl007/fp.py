@@ -1,0 +1,31 @@
+"""False-positive guards: static branches inside traced code."""
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+
+@jax.jit
+def shape_polymorphic(x, mask=None):
+    if mask is None:  # clean: structural `is None` check is static
+        mask = jnp.ones_like(x)
+    if x.ndim == 2:  # clean: rank is static metadata
+        x = x[None]
+    return x * mask
+
+
+@partial(jax.jit, static_argnames=("use_fast",))
+def static_dispatch(x, use_fast):
+    if use_fast:  # clean: jit-static argument
+        return x * 2.0
+    return x + x
+
+
+def config_branch(x, *, steps=3):
+    @jax.jit
+    def inner(v):
+        out = v
+        for _ in range(steps):  # clean: python loop over a static closure
+            out = out * 2.0
+        return out
+
+    return inner(x)

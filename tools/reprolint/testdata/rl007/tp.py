@@ -1,0 +1,20 @@
+"""True positive: Python control flow on traced values."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def data_dependent_branch(x):
+    if jnp.sum(x) > 0:  # RL007: TracerBoolConversionError under jit
+        return x
+    return -x
+
+
+def clip_body(carry, t):
+    while carry > 1.0:  # RL007: while on a traced carry inside scan
+        carry = carry * 0.5
+    return carry, t
+
+
+def run(ts):
+    return jax.lax.scan(clip_body, 10.0, ts)

@@ -1,0 +1,97 @@
+"""Minimal TOML-subset loader for ``layers.toml`` (CI pins Python 3.10, which
+predates :mod:`tomllib`, and the no-new-dependencies rule forbids ``tomli``).
+
+Supported subset — exactly what the layer map needs, nothing more:
+
+  * ``[[table]]`` array-of-tables headers;
+  * ``key = "string"`` and ``key = ["a", "b"]`` (single-line arrays of strings);
+  * ``key = 123`` integers, ``key = true/false`` booleans;
+  * ``#`` comments and blank lines.
+
+Anything else raises ``TomlError`` loudly rather than mis-parsing silently.
+When real :mod:`tomllib` is available it is preferred, so the subset parser is
+only ever the fallback — and a unit test pins the two against each other on
+the shipped ``layers.toml``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List
+
+try:  # Python >= 3.11
+    import tomllib as _tomllib
+except ModuleNotFoundError:  # pragma: no cover - depends on interpreter
+    _tomllib = None
+
+
+class TomlError(ValueError):
+    """Raised when the file uses TOML outside the supported subset."""
+
+
+_ARRAY_HEADER = re.compile(r"^\[\[([A-Za-z0-9_.-]+)\]\]$")
+_KEY_VALUE = re.compile(r"^([A-Za-z0-9_-]+)\s*=\s*(.+)$")
+
+
+def _strip_comment(line: str) -> str:
+    # A ``#`` outside quotes starts a comment.
+    out, in_str = [], False
+    for ch in line:
+        if ch == '"':
+            in_str = not in_str
+        if ch == "#" and not in_str:
+            break
+        out.append(ch)
+    return "".join(out).strip()
+
+
+def _parse_value(raw: str, lineno: int) -> Any:
+    raw = raw.strip()
+    if raw.startswith('"') and raw.endswith('"') and len(raw) >= 2:
+        return raw[1:-1]
+    if raw.startswith("[") and raw.endswith("]"):
+        inner = raw[1:-1].strip()
+        if not inner:
+            return []
+        items: List[Any] = []
+        for part in inner.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            items.append(_parse_value(part, lineno))
+        return items
+    if raw in ("true", "false"):
+        return raw == "true"
+    if re.fullmatch(r"-?\d+", raw):
+        return int(raw)
+    raise TomlError(f"line {lineno}: unsupported TOML value {raw!r}")
+
+
+def parse_subset(text: str) -> Dict[str, Any]:
+    """Parse the supported TOML subset into a plain dict."""
+    doc: Dict[str, Any] = {}
+    current: Dict[str, Any] = doc
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        line = _strip_comment(line)
+        if not line:
+            continue
+        m = _ARRAY_HEADER.match(line)
+        if m:
+            current = {}
+            doc.setdefault(m.group(1), []).append(current)
+            continue
+        if line.startswith("["):
+            raise TomlError(f"line {lineno}: only [[array-of-tables]] headers "
+                            f"are supported, got {line!r}")
+        m = _KEY_VALUE.match(line)
+        if m:
+            current[m.group(1)] = _parse_value(m.group(2), lineno)
+            continue
+        raise TomlError(f"line {lineno}: cannot parse {line!r}")
+    return doc
+
+
+def loads(text: str) -> Dict[str, Any]:
+    """Parse TOML text, preferring stdlib ``tomllib`` when present."""
+    if _tomllib is not None:
+        return _tomllib.loads(text)
+    return parse_subset(text)
