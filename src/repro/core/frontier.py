@@ -14,7 +14,7 @@ point for a QoS target.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +92,150 @@ def mean_var_completion(
     eps = _quad_grid(mean, std, num_points, fracs.dtype)
     surv = 1.0 - completion_cdf(eps, fracs, params)  # (Q,)
     return _moments_from_survival(eps, surv)
+
+
+# --------------------------------------------------------------------------
+# stochastic stage transforms (conditional branches + rework loops)
+# --------------------------------------------------------------------------
+def mixture_moments(p: Array, mean: Array, var: Array) -> Tuple[Array, Array]:
+    """Moments of ``Z = B * X`` with ``B ~ Bernoulli(p)`` independent of X.
+
+    A conditionally-executed workflow stage contributes its makespan only
+    when its path indicator fires; the law of total mean/variance over the
+    Bernoulli activation gives
+
+      E[Z]   = p E[X]
+      Var[Z] = p Var[X] + p (1 - p) E[X]^2
+
+    (condition on B: the mean-of-variances is ``p Var[X]``, the
+    variance-of-means is that of a two-point {0, E[X]} distribution).
+    Broadcasts elementwise; exact — no distributional approximation — so
+    the MC oracle (``repro.sim``) pins it to sampling noise.  ``p = 1`` is
+    an exact identity (``1*x == x``, ``v + 0.0 == v`` bitwise).
+
+    >>> import jax.numpy as jnp
+    >>> e, v = mixture_moments(jnp.float32(0.25), jnp.float32(8.0),
+    ...                        jnp.float32(4.0))
+    >>> float(e), float(v)                # 0.25*8, 0.25*4 + 0.25*0.75*64
+    (2.0, 13.0)
+    """
+    e = p * mean
+    v = p * var + p * (1.0 - p) * (mean * mean)
+    return e, v
+
+
+def truncated_geometric_moments(
+    success_prob: Array,
+    max_attempts,
+    *,
+    max_support: Optional[int] = None,
+) -> Tuple[Array, Array]:
+    """(E[N], Var[N]) of ``N = min(Geometric(q), R)`` attempt counts.
+
+    A rework loop retries a stage until it succeeds (per-attempt success
+    probability ``q``) or hits the retry cap ``R = max_attempts``; the pmf is
+    ``P(N=n) = (1-q)^(n-1) q`` for ``n < R`` and the whole surviving tail
+    ``(1-q)^(R-1)`` collapses onto ``n = R``.  Moments are computed exactly
+    from the pmf over the static support ``1..max_support`` (``max_attempts``
+    may be a traced per-stage array bounded by the static ``max_support``),
+    so this jits and differentiates through ``q``.
+
+    The untruncated limits are recovered as R grows: ``E[N] -> 1/q``,
+    ``Var[N] -> (1-q)/q^2``.  ``q = 1`` (or ``R = 1``) puts all mass on
+    ``N = 1`` exactly: E[N] == 1.0 and Var[N] == 0.0 bitwise, which is what
+    keeps zero-rework topologies on the deterministic code path's numbers.
+
+    >>> import jax.numpy as jnp
+    >>> e_n, v_n = truncated_geometric_moments(jnp.float32(0.5), 30)
+    >>> round(float(e_n), 4), round(float(v_n), 4)   # ~1/q, ~(1-q)/q^2
+    (2.0, 2.0)
+    >>> e_1, v_1 = truncated_geometric_moments(jnp.float32(0.5), 1)
+    >>> float(e_1), float(v_1)                       # cap 1 = no rework
+    (1.0, 0.0)
+    """
+    q = jnp.asarray(success_prob, jnp.float32)
+    if max_support is None:
+        if isinstance(max_attempts, int):
+            max_support = max_attempts
+        elif isinstance(max_attempts, (tuple, list)):
+            max_support = int(max(max_attempts))
+        else:
+            raise ValueError(
+                "max_support is required when max_attempts is a traced array"
+            )
+    caps = jnp.asarray(max_attempts, jnp.float32)[..., None]
+    n = jnp.arange(1, max_support + 1, dtype=jnp.float32)  # static support
+    fail = 1.0 - q[..., None]
+    geometric = fail ** (n - 1.0) * q[..., None]
+    tail = fail ** (caps - 1.0)  # all surviving mass collapses onto n == cap
+    pmf = jnp.where(n < caps, geometric, jnp.where(n == caps, tail, 0.0))
+    e_n = jnp.sum(n * pmf, axis=-1)
+    e_n2 = jnp.sum(n * n * pmf, axis=-1)
+    return e_n, jnp.maximum(e_n2 - e_n * e_n, 0.0)
+
+
+def compound_sum_moments(
+    n_mean: Array, n_var: Array, mean: Array, var: Array
+) -> Tuple[Array, Array]:
+    """Moments of ``T = sum_{i=1}^N X_i`` (i.i.d. X independent of N).
+
+    The compound-sum (Wald) identities:
+
+      E[T]   = E[N] E[X]
+      Var[T] = E[N] Var[X] + Var[N] E[X]^2
+
+    Exact for any attempt-count distribution — pair with
+    :func:`truncated_geometric_moments` for geometric rework loops.
+    ``(E[N], Var[N]) = (1, 0)`` is a bitwise identity.
+
+    >>> import jax.numpy as jnp
+    >>> e, v = compound_sum_moments(jnp.float32(2.0), jnp.float32(2.0),
+    ...                             jnp.float32(3.0), jnp.float32(0.5))
+    >>> float(e), float(v)                 # 2*3, 2*0.5 + 2*9
+    (6.0, 19.0)
+    """
+    return n_mean * mean, n_mean * var + n_var * (mean * mean)
+
+
+def stochastic_stage_moments(
+    stage_means: Array,
+    stage_vars: Array,
+    *,
+    exec_probs: Optional[Array] = None,
+    success_probs: Optional[Array] = None,
+    max_retries=None,
+    max_support: Optional[int] = None,
+) -> Tuple[Array, Array]:
+    """Effective stage-duration moments under rework loops + branch activation.
+
+    Transforms per-execution ("one attempt, stage taken") makespan moments
+    into the moments of what the stage actually contributes to the workflow:
+    geometric rework first (the loop repeats the attempt — ``success_probs``
+    is the per-attempt success probability, i.e. 1 - rework probability),
+    Bernoulli path activation second (a skipped stage skips ALL its retries).
+    Both transforms are exact in the moments, so chain compositions of the
+    result stay exact; only fork/join max-composition introduces the usual
+    moment-matching approximation.
+
+    >>> import jax.numpy as jnp
+    >>> e, v = stochastic_stage_moments(
+    ...     jnp.asarray([3.0, 5.0]), jnp.asarray([0.5, 1.0]),
+    ...     exec_probs=jnp.asarray([1.0, 0.5]),
+    ...     success_probs=jnp.asarray([0.5, 1.0]), max_retries=(30, 1))
+    >>> [round(float(x), 3) for x in e]      # stage 0: ~2 attempts of 3
+    [6.0, 2.5]
+    """
+    e, v = stage_means, stage_vars
+    if success_probs is not None:
+        if max_retries is None:
+            raise ValueError("success_probs requires max_retries")
+        n_mean, n_var = truncated_geometric_moments(
+            success_probs, max_retries, max_support=max_support
+        )
+        e, v = compound_sum_moments(n_mean, n_var, e, v)
+    if exec_probs is not None:
+        e, v = mixture_moments(exec_probs, e, v)
+    return e, v
 
 
 # --------------------------------------------------------------------------

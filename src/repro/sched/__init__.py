@@ -56,6 +56,7 @@ from .dag import (
     DagState,
     WorkflowDAG,
     dag_stats,
+    effective_stage_moments,
     init_dag,
     observe_dag,
     path_lengths,
@@ -65,8 +66,8 @@ from .dag import (
 )
 from repro.core.sharding import ShardingConfig
 
-from .objectives import Objective
-from .quantize import quantize_fractions
+from .objectives import Objective, as_stage_objectives
+from .quantize import quantize_dag_fractions, quantize_fractions
 from .scheduler import (
     ProposeStats,
     Scheduler,
@@ -106,8 +107,10 @@ __all__ = [
     "admit_workers",
     "advance_fleet",
     "anomaly",
+    "as_stage_objectives",
     "capacity",
     "dag_stats",
+    "effective_stage_moments",
     "flag_stragglers",
     "grow_capacity",
     "init",
@@ -118,6 +121,7 @@ __all__ = [
     "path_lengths",
     "propose",
     "propose_dag",
+    "quantize_dag_fractions",
     "quantize_fractions",
     "remove_workers",
     "retire_workers",

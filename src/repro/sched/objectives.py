@@ -110,6 +110,35 @@ class Objective:
         return self.kind == "deadline"
 
 
+def as_stage_objectives(objectives, num_stages: int) -> tuple:
+    """Normalize a per-stage objective spec to a validated tuple.
+
+    Accepts a single ``Objective`` (broadcast to every stage) or a sequence
+    with exactly one entry per stage.  The result is a plain tuple of frozen
+    ``Objective`` values, so it is hashable and rides through ``jax.jit`` as
+    a static argument (``sched.propose_dag(objectives=...)``,
+    ``sched.quantize_dag_fractions(objectives=...)``).
+
+    >>> objs = as_stage_objectives(Objective.mean(), 2)
+    >>> len(objs), objs[0].kind
+    (2, 'mean')
+    >>> len(as_stage_objectives((Objective.mean(), Objective.mean_var(0.5)), 2))
+    2
+    """
+    if isinstance(objectives, Objective):
+        return (objectives,) * num_stages
+    objectives = tuple(objectives)
+    if len(objectives) != num_stages:
+        raise ValueError(
+            f"need one objective per stage: got {len(objectives)} "
+            f"for {num_stages} stages"
+        )
+    for o in objectives:
+        if not isinstance(o, Objective):
+            raise TypeError(f"expected Objective, got {type(o).__name__}")
+    return objectives
+
+
 def score_moments_dynamic(
     kind: str,
     e_t: Array,

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core.frontier import UnitParams
 
-from .objectives import Objective, evaluate
+from .objectives import Objective, as_stage_objectives, evaluate
 
 Array = jax.Array
 
@@ -247,3 +247,58 @@ def quantize_fractions(
         max_moves=refine_passes * min(k, 4 * _REFINE_SLAB),
     )
     return np.asarray(refined, np.int64)
+
+
+def quantize_dag_fractions(
+    fracs: np.ndarray,
+    total_microbatches,
+    params: Optional[UnitParams] = None,
+    *,
+    objective: Objective = Objective(),
+    objectives=None,
+    min_per_worker: int = 1,
+    refine_passes: int = 4,
+    live: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Round (S, K) stage-wise fractions to per-stage integer counts.
+
+    Each stage's row quantizes independently (the lattice couples workers
+    within a stage, never across stages), so this is a host-side loop of
+    ``quantize_fractions`` calls.  ``total_microbatches`` is an int shared by
+    every stage or a per-stage sequence; ``objectives`` optionally gives each
+    stage its own rounding objective (a single ``Objective`` or one per
+    stage — same spec ``propose_dag`` takes); ``live`` is an (S, K) mask
+    (e.g. ``WorkflowDAG.stage_live()``) pinning dead pad columns of a
+    heterogeneous-width stage to exactly zero microbatches.
+    """
+    fracs = np.asarray(fracs, np.float64)
+    if fracs.ndim != 2:
+        raise ValueError(f"expected (S, K) fractions, got shape {fracs.shape}")
+    s = fracs.shape[0]
+    objs = as_stage_objectives(
+        objective if objectives is None else objectives, s
+    )
+    if np.ndim(total_microbatches) == 0:
+        totals = [int(total_microbatches)] * s
+    else:
+        totals = [int(t) for t in total_microbatches]
+        if len(totals) != s:
+            raise ValueError("need one microbatch total per stage")
+    live = None if live is None else np.asarray(live, bool)
+    counts = np.zeros(fracs.shape, np.int64)
+    for i in range(s):
+        p_i = params
+        if params is not None:
+            p_i = jax.tree_util.tree_map(
+                lambda x: jnp.asarray(np.asarray(x)[i]), params
+            )
+        counts[i] = quantize_fractions(
+            fracs[i],
+            totals[i],
+            p_i,
+            objective=objs[i],
+            min_per_worker=min_per_worker,
+            refine_passes=refine_passes,
+            live=None if live is None else live[i],
+        )
+    return counts

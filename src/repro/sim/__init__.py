@@ -1,0 +1,43 @@
+"""Monte-Carlo workflow simulation — the oracle layer for composition rules.
+
+``repro.sim`` sits between ``core`` (whose analytic moment-composition rules
+it independently checks) and ``sched`` (whose topologies it consumes
+duck-typed, never by import).  One generative process, written directly from
+the model definition, backs three uses:
+
+  * **oracle** — every closed-form rule in ``repro.core.frontier`` is pinned
+    against :func:`simulate_moments` in ``tests/test_stochastic.py``;
+  * **evaluator** — :func:`simulate_workflow` measures a proposal's TRUE
+    expected completion time under known worker parameters (how the
+    stochastic-aware partitioner is shown to beat the deterministic one);
+  * **fixture factory** — :func:`simulate_telemetry` draws per-worker
+    telemetry from the same model the estimator assumes.
+
+>>> import jax, jax.numpy as jnp
+>>> from repro import sim
+>>> from repro.core.frontier import UnitParams
+>>> params = UnitParams.of(mu=jnp.full((1, 2), 6.0),
+...                        sigma=jnp.full((1, 2), 0.3))
+>>> e, v = sim.simulate_moments(jax.random.PRNGKey(0), ((),),
+...                             jnp.full((1, 2), 0.5), params,
+...                             num_samples=8192, batch_size=4096)
+>>> bool(abs(float(e) - 3.0) < 0.1)     # one stage, two workers at f=0.5
+True
+"""
+from .workflow import (
+    DEFAULT_BATCH_SIZE,
+    DEFAULT_NUM_SAMPLES,
+    simulate_moments,
+    simulate_telemetry,
+    simulate_workflow,
+    topology_spec,
+)
+
+__all__ = [
+    "DEFAULT_BATCH_SIZE",
+    "DEFAULT_NUM_SAMPLES",
+    "simulate_moments",
+    "simulate_telemetry",
+    "simulate_workflow",
+    "topology_spec",
+]

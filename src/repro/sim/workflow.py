@@ -1,0 +1,269 @@
+"""Monte-Carlo workflow simulator: the independent oracle for composition.
+
+Every closed-form composition rule in ``repro.core.frontier`` — worker-max
+quadrature, serial sums, PERT branch-max, and the stochastic transforms
+(:func:`~repro.core.frontier.mixture_moments`,
+:func:`~repro.core.frontier.truncated_geometric_moments`,
+:func:`~repro.core.frontier.compound_sum_moments`) — is an analytic claim
+about a generative process.  This module IS that generative process, written
+once, directly from the model's definition:
+
+  * per-attempt stage makespan = max over workers of
+    ``N(f_k^alpha mu_k, (f_k^beta sigma_k)^2)`` (the paper's per-unit model,
+    via the same ``component_mean_std`` the analytic path uses, so floors
+    match bit-for-bit);
+  * rework loops: each stage re-runs until an attempt succeeds (per-attempt
+    rework probability ``r_s``) or the ``max_retries`` cap is hit — attempt
+    counts are truncated-geometric by construction, and the stage's duration
+    is the EXACT sum over its sampled attempts;
+  * conditional branches: each stage fires an independent Bernoulli
+    ``exec_probs`` indicator per sample; a skipped stage contributes zero
+    duration but still forwards its predecessors' finish times (the same
+    semantics the mixture-moment transform encodes);
+  * composition: exact max over predecessor finish times at joins, exact sum
+    along chains, exact max over sinks — no Normal moment-matching anywhere.
+
+Because the simulator shares NO composition code with the analytic path
+(only the per-unit parameterization), agreement within Monte-Carlo error is
+evidence, not tautology.  ``tests/test_stochastic.py`` pins every rule to it
+at >= 2e5 samples; the telemetry generator below doubles as the fixture
+factory for scenario tests.
+
+Topology is duck-typed: anything with ``.preds`` (plus optional
+``.exec_probs`` / ``.rework_probs`` / ``.max_retries``, e.g.
+``repro.sched.WorkflowDAG``) or a bare ``preds`` tuple-of-tuples works —
+this layer sits below ``sched`` and never imports it.
+
+Sampling is batched: the per-batch draw tensor is (batch, S, R_max, K), so
+``batch_size`` bounds peak memory while ``jax.lax.map`` streams batches;
+each batch consumes its own key from one ``jax.random.split`` (RL006).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frontier import UnitParams, component_mean_std
+
+Array = jax.Array
+
+DEFAULT_NUM_SAMPLES = 200_000
+DEFAULT_BATCH_SIZE = 8_192
+
+
+def topology_spec(
+    topology,
+) -> Tuple[
+    Tuple[Tuple[int, ...], ...],
+    Tuple[float, ...],
+    Tuple[float, ...],
+    Tuple[int, ...],
+]:
+    """Normalize a duck-typed topology into hashable (jit-static) tuples.
+
+    Accepts a bare ``preds`` tuple-of-tuples or any object exposing
+    ``.preds`` and optionally ``.exec_probs`` / ``.rework_probs`` /
+    ``.max_retries`` (absent/None annotations mean the degenerate
+    deterministic values: always execute, never rework).
+    """
+    preds = getattr(topology, "preds", topology)
+    preds = tuple(tuple(int(p) for p in ps) for ps in preds)
+    s = len(preds)
+    exec_probs = getattr(topology, "exec_probs", None)
+    rework_probs = getattr(topology, "rework_probs", None)
+    max_retries = getattr(topology, "max_retries", None)
+    exec_probs = (1.0,) * s if exec_probs is None else tuple(map(float, exec_probs))
+    rework_probs = (
+        (0.0,) * s if rework_probs is None else tuple(map(float, rework_probs))
+    )
+    max_retries = (
+        (1,) * s if max_retries is None else tuple(int(r) for r in max_retries)
+    )
+    if not (len(exec_probs) == len(rework_probs) == len(max_retries) == s):
+        raise ValueError("stochastic annotations must have one entry per stage")
+    return preds, exec_probs, rework_probs, max_retries
+
+
+def _stage_durations(
+    key: Array,
+    mean: Array,
+    std: Array,
+    exec_probs: Tuple[float, ...],
+    rework_probs: Tuple[float, ...],
+    max_retries: Tuple[int, ...],
+    num_samples: int,
+) -> Array:
+    """(num_samples, S) sampled effective stage durations (rework + branch)."""
+    s = mean.shape[0]
+    r_max = max(max_retries)
+    k_dur, k_rework, k_branch = jax.random.split(key, 3)
+
+    # Every attempt is an independent worker-max draw: (n, S, R_max, K).
+    z = jax.random.normal(k_dur, (num_samples, s, r_max) + mean.shape[1:])
+    attempts = jnp.max(mean[None, :, None, :] + std[None, :, None, :] * z, axis=-1)
+
+    # Truncated-geometric attempt counts by inverse CDF.  log(r) = -inf at
+    # r = 0 sends the ratio to -0.0 -> exactly one attempt, no NaN.
+    r = jnp.asarray(rework_probs, jnp.float32)
+    caps = jnp.asarray(max_retries, jnp.float32)
+    u = jax.random.uniform(k_rework, (num_samples, s))
+    n_attempts = jnp.minimum(
+        1.0 + jnp.floor(jnp.log1p(-u) / jnp.log(jnp.maximum(r, 1e-38))), caps
+    )
+    n_attempts = jnp.where(r <= 0.0, 1.0, n_attempts)
+    taken = (
+        jnp.arange(r_max, dtype=jnp.float32)[None, None, :]
+        < n_attempts[..., None]
+    )
+    duration = jnp.sum(attempts * taken, axis=-1)  # (n, S)
+
+    # Bernoulli path activation: skipped stages contribute zero duration.
+    p = jnp.asarray(exec_probs, jnp.float32)
+    active = jax.random.bernoulli(k_branch, p, (num_samples, s))
+    return duration * active
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "preds",
+        "exec_probs",
+        "rework_probs",
+        "max_retries",
+        "num_samples",
+        "batch_size",
+    ),
+)
+def _simulate(
+    key: Array,
+    fracs: Array,
+    params: UnitParams,
+    *,
+    preds: Tuple[Tuple[int, ...], ...],
+    exec_probs: Tuple[float, ...],
+    rework_probs: Tuple[float, ...],
+    max_retries: Tuple[int, ...],
+    num_samples: int,
+    batch_size: int,
+) -> Array:
+    mean, std = component_mean_std(fracs, params)  # (S, K) — shared floors
+    num_batches = -(-num_samples // batch_size)
+    keys = jax.random.split(key, num_batches)
+
+    def one_batch(k: Array) -> Array:
+        contrib = _stage_durations(
+            k, mean, std, exec_probs, rework_probs, max_retries, batch_size
+        )
+        # Exact topological composition per sample: start at the max over
+        # predecessor finishes, finish after this stage's sampled duration.
+        fin: list = [None] * len(preds)
+        for i, ps in enumerate(preds):
+            start = functools.reduce(
+                jnp.maximum,
+                [fin[q] for q in ps],
+                jnp.zeros((batch_size,), jnp.float32),
+            )
+            fin[i] = start + contrib[:, i]
+        has_succ = {q for ps in preds for q in ps}
+        sinks = [i for i in range(len(preds)) if i not in has_succ]
+        return functools.reduce(jnp.maximum, [fin[i] for i in sinks])
+
+    return jax.lax.map(one_batch, keys).reshape(-1)
+
+
+def simulate_workflow(
+    key: Array,
+    topology,
+    fracs: Array,
+    params: UnitParams,
+    *,
+    num_samples: int = DEFAULT_NUM_SAMPLES,
+    batch_size: int = DEFAULT_BATCH_SIZE,
+) -> Array:
+    """Sampled end-to-end completion times of a (stochastic) workflow.
+
+    ``topology`` is duck-typed (see :func:`topology_spec`); ``fracs`` and the
+    ``UnitParams`` leaves are (S, K) — pass the TRUE worker parameters to use
+    the simulator as an oracle, or posterior point estimates to stress a
+    proposal under the scheduler's own beliefs.  Returns at least
+    ``num_samples`` samples (rounded up to whole batches of ``batch_size``).
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.core.frontier import UnitParams
+    >>> params = UnitParams.of(mu=jnp.full((2, 2), 8.0),
+    ...                        sigma=jnp.full((2, 2), 0.2))
+    >>> fracs = jnp.full((2, 2), 0.5)
+    >>> t = simulate_workflow(jax.random.PRNGKey(0), ((), (0,)), fracs,
+    ...                       params, num_samples=4096, batch_size=2048)
+    >>> t.shape                       # chain of two stages, ~2 * 0.5 * 8
+    (4096,)
+    >>> bool(abs(float(jnp.mean(t)) - 8.0) < 0.5)
+    True
+    """
+    preds, exec_probs, rework_probs, max_retries = topology_spec(topology)
+    fracs = jnp.asarray(fracs, jnp.float32)
+    if fracs.ndim != 2 or fracs.shape[0] != len(preds):
+        raise ValueError(
+            f"fracs must be (S, K) with S == {len(preds)}, got {fracs.shape}"
+        )
+    return _simulate(
+        key,
+        fracs,
+        params,
+        preds=preds,
+        exec_probs=exec_probs,
+        rework_probs=rework_probs,
+        max_retries=max_retries,
+        num_samples=int(num_samples),
+        batch_size=int(min(batch_size, num_samples)),
+    )
+
+
+def simulate_moments(
+    key: Array,
+    topology,
+    fracs: Array,
+    params: UnitParams,
+    *,
+    num_samples: int = DEFAULT_NUM_SAMPLES,
+    batch_size: int = DEFAULT_BATCH_SIZE,
+) -> Tuple[Array, Array]:
+    """(E, Var) of the end-to-end completion time, straight from samples."""
+    t = simulate_workflow(
+        key,
+        topology,
+        fracs,
+        params,
+        num_samples=num_samples,
+        batch_size=batch_size,
+    )
+    return jnp.mean(t), jnp.var(t)
+
+
+@functools.partial(jax.jit, static_argnames=("num_obs",))
+def simulate_telemetry(
+    key: Array,
+    fracs: Array,
+    params: UnitParams,
+    *,
+    num_obs: int = 16,
+    noise: Optional[Array] = None,
+) -> Array:
+    """Per-worker telemetry times from the true generative model.
+
+    Returns ``fracs.shape + (num_obs,)`` completion times — (K, N) for a flat
+    fleet, (S, K, N) for a stage-stacked DAG — each
+    ``t = f^alpha mu + f^beta sigma z`` with fresh standard-normal ``z``
+    (floored at a small positive so degenerate draws stay physical).  The
+    fixture generator for scenario tests: feed the result to
+    ``sched.Telemetry`` / ``observe_dag`` and the estimator should recover
+    ``params``.  ``noise`` optionally scales the per-draw std (stress tests).
+    """
+    mean, std = component_mean_std(jnp.asarray(fracs, jnp.float32), params)
+    if noise is not None:
+        std = std * noise
+    z = jax.random.normal(key, mean.shape + (num_obs,))
+    return jnp.maximum(mean[..., None] + std[..., None] * z, 1e-6)

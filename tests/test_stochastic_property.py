@@ -1,0 +1,83 @@
+"""Hypothesis property tests: random stochastic DAGs vs the MC oracle.
+
+Separate module so the deterministic suite in ``test_stochastic.py`` still
+runs where hypothesis is absent (same ``importorskip`` discipline as
+``test_property.py``)."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro import sched
+from tests.test_stochastic import _mc_check, _stage_params
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+@given(
+    s=st.integers(2, 4),
+    seed=st.integers(0, 50),
+    exec_lo=st.floats(0.25, 1.0),
+    rework_hi=st.floats(0.0, 0.5),
+    cap=st.integers(1, 5),
+)
+@settings(max_examples=6, deadline=None, derandomize=True)
+def test_random_stochastic_chain_matches_oracle(
+    s, seed, exec_lo, rework_hi, cap
+):
+    """Property: for ANY chain with random branch/rework annotations, the
+    analytic moments land within 1e-2 relative of the MC oracle (mean AND
+    variance) — serial composition of the stochastic transforms is exact in
+    moments, so the tolerance is MC noise + quadrature only."""
+    rng = np.random.default_rng(seed)
+    dag = sched.WorkflowDAG.chain(s, 3).with_stochastic(
+        exec_probs=tuple(
+            round(float(x), 3) for x in rng.uniform(exec_lo, 1.0, s)
+        ),
+        rework_probs=tuple(
+            round(float(x), 3) for x in rng.uniform(0.0, rework_hi, s)
+        ),
+        max_retries=(cap,) * s,
+    )
+    params = _stage_params(seed + 100, s, 3)
+    fracs = jnp.asarray(
+        rng.dirichlet(np.ones(3), size=s).astype(np.float32)
+    )
+    _mc_check(dag, fracs, params, 200_000, 1e-2, 1e-2, seed=seed + 1000)
+
+
+@given(s=st.integers(3, 5), seed=st.integers(0, 50))
+@settings(max_examples=6, deadline=None, derandomize=True)
+def test_random_stochastic_intree_matches_oracle(s, seed):
+    """Property: random in-trees (every stage feeds exactly one successor,
+    so branch finishes are genuinely independent) with random stochastic
+    annotations.  Joins go through the Normal-matched PERT max, so the
+    variance tolerance is wider than the exact-in-moments chain case."""
+    rng = np.random.default_rng(seed)
+    # parent[i] in (i, s): an in-tree onto the single sink s-1.
+    preds = [[] for _ in range(s)]
+    for i in range(s - 1):
+        preds[int(rng.integers(i + 1, s))].append(i)
+    dag = sched.WorkflowDAG(
+        preds=tuple(tuple(p) for p in preds), num_workers=3
+    ).with_stochastic(
+        exec_probs=tuple(
+            round(float(x), 3) for x in rng.uniform(0.4, 1.0, s)
+        ),
+        rework_probs=tuple(
+            round(float(x), 3) for x in rng.uniform(0.0, 0.4, s)
+        ),
+        max_retries=tuple(int(c) for c in rng.integers(1, 6, s)),
+    )
+    params = _stage_params(seed + 200, s, 3)
+    fracs = jnp.asarray(
+        rng.dirichlet(np.ones(3), size=s).astype(np.float32)
+    )
+    _mc_check(dag, fracs, params, 200_000, 1.5e-2, 8e-2, seed=seed + 2000)
